@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-path cost vs the
+jnp reference path that serves CPU hot paths.  On real TPU the Pallas path
+compiles via Mosaic; interpret mode here is the correctness oracle, so the
+derived field records validation, not speed."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import packet as pkt
+from repro.kernels.checksum import ops as cops
+from repro.kernels.ddt import ops as dops
+from repro.kernels.matcher import ops as mops
+from repro.core import matching
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # ddt gather: 1 MiB message
+    s = 1 << 18
+    src = jnp.asarray(rng.normal(size=s).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, s, size=s).astype(np.int32))
+    ref = jax.jit(lambda a, b: dops.gather(a, b, use_kernel=False))
+    t = time_fn(ref, src, idx)
+    gbps = s * 4 * 8 / t / 1e9
+    ok = np.array_equal(np.asarray(dops.gather(src[:4096], idx[:4096] % 4096,
+                                               use_kernel=True)),
+                        np.asarray(dops.gather(src[:4096], idx[:4096] % 4096,
+                                               use_kernel=False)))
+    row("kernel_ddt_gather_1MB", t * 1e6,
+        f"ref_gbps={gbps:.2f};pallas_interpret_ok={ok}")
+
+    # checksum over 256 MTU frames
+    frames = [pkt.make_icmp_echo(rng.integers(0, 256, 1024).astype(np.uint8))
+              for _ in range(256)]
+    b = pkt.stack_frames(frames)
+    ref = jax.jit(lambda d, ln: cops.internet_checksum(
+        d, ln, start=pkt.L4_BASE, use_kernel=False))
+    t = time_fn(ref, b.data, b.length)
+    ok = np.array_equal(
+        np.asarray(cops.internet_checksum(b.data[:32], b.length[:32],
+                                          start=pkt.L4_BASE,
+                                          use_kernel=True)),
+        np.asarray(cops.internet_checksum(b.data[:32], b.length[:32],
+                                          start=pkt.L4_BASE,
+                                          use_kernel=False)))
+    row("kernel_checksum_256pkt", t * 1e6,
+        f"ref_gbps={256 * 1024 * 8 / t / 1e9:.2f};pallas_interpret_ok={ok}")
+
+    # matcher over 1024 packets × 3 contexts
+    frames = [pkt.make_udp(np.zeros(64, np.uint8), dport=9999)
+              for _ in range(1024)]
+    b = pkt.stack_frames(frames)
+    tables = matching.MatchTables.build(
+        [matching.ruleset_icmp_echo(), matching.ruleset_udp_pingpong(9999),
+         matching.ruleset_slmp()])
+    words = b.words()
+    ref = jax.jit(lambda w: mops.match(w, tables.rules, tables.modes,
+                                       use_kernel=False)[0])
+    t = time_fn(ref, words)
+    mk, _ = mops.match(words[:128], tables.rules, tables.modes,
+                       use_kernel=True)
+    mr, _ = mops.match(words[:128], tables.rules, tables.modes,
+                       use_kernel=False)
+    ok = np.array_equal(np.asarray(mk), np.asarray(mr))
+    row("kernel_matcher_1024pkt", t * 1e6,
+        f"mpps={1024 / t / 1e6:.1f};pallas_interpret_ok={ok}")
+
+
+if __name__ == "__main__":
+    run()

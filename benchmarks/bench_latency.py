@@ -1,0 +1,91 @@
+"""Paper Table II: per-module datapath latency.
+
+Two columns:
+  * the paper's RTL-derived numbers, reproduced verbatim from the
+    analytic hardware model (cycles, clock, ns);
+  * measured per-packet wall-clock of this implementation's corresponding
+    vectorized module (batch cost / batch size) — the TPU-adapted
+    equivalents run three orders of magnitude more packets per invocation,
+    which is the point of the adaptation.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import alloc as palloc
+from repro.core import her as herlib
+from repro.core import hwmodel, matching, packet as pkt
+
+BATCH = 256
+
+
+def run() -> None:
+    # ---- paper Table II from the model
+    for mod, info in hwmodel.table2().items():
+        ns = info["ns"]
+        ns_str = (f"{ns[0]:.0f}-{ns[1]:.0f}" if isinstance(ns, tuple)
+                  else f"{ns:.0f}")
+        row(f"table2_{mod}", 0.0,
+            f"cycles={info['cycles']};mhz={info['mhz']};ns={ns_str}")
+
+    rng = np.random.default_rng(0)
+    frames = [pkt.make_udp(rng.integers(0, 256, 64).astype(np.uint8),
+                           dport=9999) for _ in range(BATCH)]
+    batch = pkt.stack_frames(frames)
+    tables = matching.MatchTables.build([matching.ruleset_udp_pingpong()])
+
+    # ---- matching engine
+    match = jax.jit(lambda b: matching.match_batch(b, tables)[0])
+    t = time_fn(match, batch)
+    row("module_matching_engine", t / BATCH * 1e6,
+        f"paper_ns={hwmodel.match_ns():.0f}")
+
+    # ---- allocator
+    st = palloc.make_state()
+    alloc_fn = jax.jit(
+        lambda s, ln, v: palloc.alloc(s, ln, v)[1])
+    t = time_fn(alloc_fn, st, batch.length, batch.valid)
+    row("module_allocator", t / BATCH * 1e6, "paper_ns=0")
+
+    # ---- ingress DMA (L2 scatter)
+    l2 = jnp.zeros((palloc.L2_PKT_BYTES,), jnp.uint8)
+    addr = jnp.arange(BATCH, dtype=jnp.int32) * pkt.MTU % palloc.LARGE_BASE
+
+    def ingress(l2, data, addr):
+        off = addr[:, None] + jnp.arange(pkt.MTU, dtype=jnp.int32)[None]
+        return l2.at[off.reshape(-1)].set(data.reshape(-1), mode="drop")
+
+    t = time_fn(jax.jit(ingress), l2, batch.data, addr)
+    row("module_ingress_dma", t / BATCH * 1e6,
+        f"paper_ns={hwmodel.ingress_dma_ns(64):.0f}-"
+        f"{hwmodel.ingress_dma_ns(1536):.0f}")
+
+    # ---- HER generator + MPQ scheduling
+    mpq = herlib.make_mpq()
+    her_fn = jax.jit(lambda m, c, a, s, i, e, v:
+                     herlib.generate(m, c, a, s, i, e, v)[1].lane)
+    ctx = jnp.zeros((BATCH,), jnp.int32)
+    msg = jnp.arange(BATCH, dtype=jnp.uint32) % 8
+    eom = jnp.zeros((BATCH,), bool)
+    t = time_fn(her_fn, mpq, ctx, addr, batch.length, msg, eom,
+                batch.valid)
+    row("module_her_generator", t / BATCH * 1e6, "paper_ns=0")
+
+    # ---- host DMA (byte-granular scatter, unaligned-capable)
+    host = jnp.zeros((1 << 20,), jnp.uint8)
+
+    def hostdma(host, data):
+        off = (jnp.arange(BATCH)[:, None] * 1536 + 3        # unaligned +3
+               + jnp.arange(pkt.MTU, dtype=jnp.int32)[None])
+        return host.at[off.reshape(-1)].set(data.reshape(-1), mode="drop")
+
+    t = time_fn(jax.jit(hostdma), host, batch.data)
+    row("module_host_dma", t / BATCH * 1e6,
+        f"paper_ns={hwmodel.HOST_DMA_NS}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing, CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-clock seconds per call (blocking on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line)
+    return line

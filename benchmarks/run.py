@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_pingpong : Fig 7  (RTT, 3 modes × ICMP/UDP × payload)
+  bench_slmp     : Fig 8  (throughput vs window size, failures)
+  bench_ddt      : Fig 10 (DDT throughput + overlap ratio)
+  bench_latency  : Table II (module latencies)
+  bench_kernels  : Pallas kernel micro-benchmarks
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_ddt, bench_kernels, bench_latency,
+                            bench_pingpong, bench_slmp)
+    suites = [
+        ("fig7_pingpong", bench_pingpong.run),
+        ("fig8_slmp", bench_slmp.run),
+        ("fig10_ddt", bench_ddt.run),
+        ("table2_latency", bench_latency.run),
+        ("kernels", bench_kernels.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---")
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

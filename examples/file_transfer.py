@@ -1,0 +1,59 @@
+"""Reliable file transfer over SLMP (paper §V-B / Fig 8).
+
+    PYTHONPATH=src python examples/file_transfer.py [size_kb] [window]
+
+Sender segments the file into SLMP packets (SYN on every segment in
+window mode); the receiver side runs *entirely in sPIN handlers* on the
+sNIC: header handler opens the message context, packet handlers DMA
+payloads to host memory at their offsets and ACK, the tail handler pushes
+the completion notification into the host FIFO.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import time
+
+import numpy as np
+
+from repro.core import packet as pkt, slmp, spin_nic
+
+
+def main():
+    size_kb = int(sys.argv[1]) if len(sys.argv) > 1 else 256
+    window = int(sys.argv[2]) if len(sys.argv) > 2 else 16
+    nbytes = size_kb << 10
+
+    nic = spin_nic.SpinNIC([slmp.make_slmp_context()],
+                           host_bytes=max(nbytes, 1 << 16), batch=window)
+    state = nic.init_state()
+
+    rng = np.random.default_rng(1)
+    blob = rng.integers(0, 256, nbytes).astype(np.uint8)
+    cfg = slmp.SlmpSenderConfig(window=window)
+    frames = slmp.segment_message(blob, msg_id=1001, cfg=cfg)
+    print(f"file: {size_kb} KiB -> {len(frames)} SLMP segments, "
+          f"window {window}")
+
+    # warm the jit (compile excluded from goodput)
+    state, _, _ = nic.step(state, pkt.stack_frames([], n=window))
+
+    t0 = time.perf_counter()
+    acked = 0
+    for i in range(0, len(frames), window):       # one window per step
+        state, egress, _ = nic.step(
+            state, pkt.stack_frames(frames[i:i + window], n=window))
+        acked += len(slmp.parse_acks(egress))
+    dt = time.perf_counter() - t0
+
+    got = nic.read_host(state, 0, nbytes)
+    ok = bool((got == blob).all())
+    completions = nic.pop_counters(state, slmp.COMPLETION_QUEUE)
+    print(f"delivered={ok} acks={acked}/{len(frames)} "
+          f"completions={completions.tolist()} "
+          f"host-goodput={nbytes / dt / 1e6:.1f} MB/s (this CPU)")
+    assert ok and completions.tolist() == [1001]
+    print("file_transfer OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper's Listing 1+2 — an offloaded ICMP Echo responder.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Installs an execution context whose ruleset matches ICMP Echo-Requests
+(word-8 / mask 0xff00 / 0x0800, exactly Fig 6), sends pings through the
+sNIC, and verifies the replies the packet handler produced — checksum
+recomputed on-NIC, MAC/IP swapped, host CPU never touched.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import apps, matching, packet as pkt, spin_nic
+
+
+def main():
+    # fpspin_init(ctx, "/dev/pspin0", handlers, ruleset) equivalent:
+    nic = spin_nic.SpinNIC([apps.make_icmp_context()], batch=16)
+    state = nic.init_state()
+
+    rs = matching.ruleset_icmp_echo()
+    print("ICMP-echo ruleset (paper Listing 2):")
+    for r in rs.rules:
+        print(f"  idx={r.idx} mask={r.mask:#010x} "
+              f"start={r.start:#x} end={r.end:#x}")
+
+    rng = np.random.default_rng(0)
+    for seq, size in enumerate([16, 64, 256, 1024]):
+        payload = rng.integers(0, 256, size).astype(np.uint8)
+        ping = pkt.make_icmp_echo(payload, seq=seq)
+        state, egress, to_host = nic.step(
+            state, pkt.stack_frames([ping], n=16))
+        ev = np.asarray(egress.valid)
+        assert ev.sum() == 1, "handler must emit exactly one reply"
+        i = int(np.argmax(ev))
+        reply = np.asarray(egress.data)[i][:int(np.asarray(egress.length)[i])]
+        ck_ok = pkt.internet_checksum_np(reply[pkt.L4_BASE:]) == 0
+        echo_ok = bool((reply[pkt.L4_BASE + 8:] == payload).all())
+        print(f"ping seq={seq} payload={size:5d}B -> reply "
+              f"type={reply[pkt.ICMP_TYPE]} checksum_ok={ck_ok} "
+              f"payload_ok={echo_ok}")
+        assert ck_ok and echo_ok
+    print("quickstart OK: offloaded ICMP responder verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Bimodal fixed-slot packet-buffer allocator (paper §IV, block 2).
+
+PsPIN's verilator testbench used a software ring buffer with out-of-order
+frees — "difficult to implement in hardware".  FPsPIN instead partitions
+the L2 packet buffer into two halves: fixed 128-byte slots and fixed
+1536-byte slots, with free slots held in two FIFOs; allocation pops,
+free pushes.  (Motivated by the bimodal Internet/datacenter packet-size
+distribution: ~40 % <= 64 B, ~40 % ~1500 B.)
+
+This is an exact functional reproduction: the FIFOs are circular buffers
+in a pure-JAX ``AllocState``; a whole batch of requests is served in one
+vectorized step (per-class ranks via cumsum — pops stay FIFO-ordered, and
+once a class is exhausted every later request in the batch fails, exactly
+like sequential pops).  Property tests (tests/test_properties.py) check the
+no-double-allocation and conservation invariants under random
+alloc/free interleavings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packet import MTU, SMALL_SLOT
+
+# Paper Table I: FPsPIN L2 packet memory = 512 KiB, split in half.
+L2_PKT_BYTES = 512 * 1024
+N_SMALL = (L2_PKT_BYTES // 2) // SMALL_SLOT          # 2048 slots
+N_LARGE = (L2_PKT_BYTES // 2) // MTU                 # 170 slots
+LARGE_BASE = N_SMALL * SMALL_SLOT                    # byte address of region
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AllocState:
+    small_fifo: jax.Array   # (N_SMALL,) int32 slot ids
+    small_head: jax.Array   # () int32
+    small_count: jax.Array  # () int32
+    large_fifo: jax.Array
+    large_head: jax.Array
+    large_count: jax.Array
+
+    def tree_flatten(self):
+        return (self.small_fifo, self.small_head, self.small_count,
+                self.large_fifo, self.large_head, self.large_count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_state(n_small: int = N_SMALL, n_large: int = N_LARGE) -> AllocState:
+    return AllocState(
+        small_fifo=jnp.arange(n_small, dtype=jnp.int32),
+        small_head=jnp.zeros((), jnp.int32),
+        small_count=jnp.asarray(n_small, jnp.int32),
+        large_fifo=jnp.arange(n_large, dtype=jnp.int32),
+        large_head=jnp.zeros((), jnp.int32),
+        large_count=jnp.asarray(n_large, jnp.int32),
+    )
+
+
+def _class_alloc(fifo, head, count, want):
+    """Vectorized FIFO pop for one size class.
+
+    want: (N,) bool.  Returns (fifo, head, count, slot, ok).
+    """
+    cap = fifo.shape[0]
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1          # pop order
+    ok = want & (rank < count)
+    pos = (head + jnp.maximum(rank, 0)) % cap
+    slot = fifo[pos]
+    taken = ok.sum().astype(jnp.int32)
+    return (head + taken) % cap, count - taken, slot, ok
+
+
+def alloc(state: AllocState, sizes: jax.Array, valid: jax.Array):
+    """Allocate a slot per packet.  sizes (N,) int32, valid (N,) bool.
+
+    Returns (state, addr (N,) int32, ok (N,) bool).  addr is the byte
+    address within the L2 packet buffer; -1 when allocation failed (the
+    packet is dropped — completion never arrives, exactly as in hardware
+    when the free FIFO underflows).
+    """
+    is_small = sizes <= SMALL_SLOT
+    sh, sc, s_slot, s_ok = _class_alloc(
+        state.small_fifo, state.small_head, state.small_count,
+        valid & is_small)
+    lh, lc, l_slot, l_ok = _class_alloc(
+        state.large_fifo, state.large_head, state.large_count,
+        valid & ~is_small)
+    addr = jnp.where(
+        s_ok, s_slot * SMALL_SLOT,
+        jnp.where(l_ok, LARGE_BASE + l_slot * MTU, -1)).astype(jnp.int32)
+    new = AllocState(state.small_fifo, sh, sc, state.large_fifo, lh, lc)
+    return new, addr, s_ok | l_ok
+
+
+def _class_free(fifo, head, count, slot, do):
+    cap = fifo.shape[0]
+    rank = jnp.cumsum(do.astype(jnp.int32)) - 1
+    tail = (head + count) % cap
+    pos = jnp.where(do, (tail + rank) % cap, cap)           # cap -> dropped
+    fifo = fifo.at[pos].set(slot, mode="drop")
+    return fifo, count + do.sum().astype(jnp.int32)
+
+
+def free(state: AllocState, addr: jax.Array, do: jax.Array) -> AllocState:
+    """Return slots to their FIFOs.  addr (N,) int32, do (N,) bool."""
+    do = do & (addr >= 0)
+    is_small = addr < LARGE_BASE
+    s_fifo, s_count = _class_free(
+        state.small_fifo, state.small_head, state.small_count,
+        addr // SMALL_SLOT, do & is_small)
+    l_fifo, l_count = _class_free(
+        state.large_fifo, state.large_head, state.large_count,
+        (addr - LARGE_BASE) // MTU, do & ~is_small)
+    return AllocState(s_fifo, state.small_head, s_count,
+                      l_fifo, state.large_head, l_count)

@@ -1,0 +1,119 @@
+"""Built-in sPIN handler applications (paper Listings 1–2 and §V-C).
+
+* ICMP echo responder — the Listing 1/2 example: full-payload RFC1071
+  checksum inside the packet handler.
+* UDP ping-pong responder — checksum-free (UDP checksum optional/omitted).
+* MPI DDT receive context — SLMP transport + datatype scatter into host
+  memory using the committed index map (dataloop engine offload).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import checksum as ck
+from repro.core import ddt as ddtlib
+from repro.core import handlers as H
+from repro.core import matching
+from repro.core import packet as pkt
+from repro.core import slmp
+
+
+# ------------------------------------------------------------- ICMP echo
+def icmp_echo_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+    """Listing 1: swap MAC/IP, type=EchoReply, recompute full checksum."""
+    out = H.none_out()
+    d = args.pkt
+    d = pkt.swap_bytes(d, pkt.ETH_DST, pkt.ETH_SRC, 6)
+    d = pkt.swap_bytes(d, pkt.IP_SRC, pkt.IP_DST, 4)
+    d = d.at[pkt.ICMP_TYPE].set(pkt.ICMP_ECHO_REPLY)
+    d = pkt.write_u16(d, pkt.ICMP_CSUM, 0)
+    c = ck.internet_checksum_1(d, args.pkt_len, pkt.L4_BASE)
+    d = pkt.write_u16(d, pkt.ICMP_CSUM, c)
+    return H.spin_send_packet(out, d, args.pkt_len)
+
+
+def make_icmp_context() -> H.ExecutionContext:
+    return H.ExecutionContext(
+        name="icmp_echo", ruleset=matching.ruleset_icmp_echo(),
+        packet=icmp_echo_packet_handler)
+
+
+# ---------------------------------------------------------- UDP ping-pong
+def udp_pingpong_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+    out = H.none_out()
+    d = args.pkt
+    d = pkt.swap_bytes(d, pkt.ETH_DST, pkt.ETH_SRC, 6)
+    d = pkt.swap_bytes(d, pkt.IP_SRC, pkt.IP_DST, 4)
+    d = pkt.swap_bytes(d, pkt.UDP_SPORT, pkt.UDP_DPORT, 2)
+    return H.spin_send_packet(out, d, args.pkt_len)
+
+
+def make_udp_pingpong_context(port: int = 9999) -> H.ExecutionContext:
+    return H.ExecutionContext(
+        name="udp_pingpong", ruleset=matching.ruleset_udp_pingpong(port),
+        packet=udp_pingpong_packet_handler)
+
+
+# -------------------------------------------------- Host+FPsPIN ping mode
+def icmp_to_host_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+    """Host+FPsPIN mode: DMA the frame to host memory and notify; the host
+    computes the checksum and injects the reply (bench_pingpong drives the
+    host half)."""
+    out = H.none_out()
+    lane = jnp.arange(pkt.MTU, dtype=jnp.int32)
+    off = jnp.where(lane < args.pkt_len, lane, -1)
+    out = H.spin_dma_scatter(out, off, args.pkt)
+    return H.push_counter(out, slmp.COMPLETION_QUEUE, args.pkt_len)
+
+
+def make_icmp_host_context(host_base: int = 0) -> H.ExecutionContext:
+    return H.ExecutionContext(
+        name="icmp_hostpath", ruleset=matching.ruleset_icmp_echo(),
+        packet=icmp_to_host_packet_handler, host_base=host_base)
+
+
+# ------------------------------------------------------ MPI DDT processing
+def make_ddt_packet_handler(committed: ddtlib.CommittedDDT,
+                            msgs_in_flight: int = 16):
+    """Packet handler for DDT receive: scatter payload bytes through the
+    committed datatype's msg→mem map.  Parallel messages are placed at
+    ``msg_id * mem_bytes`` (disjoint regions, as the paper's 16 concurrent
+    messages)."""
+    msg_to_mem = jnp.asarray(committed.msg_to_mem)
+    mem_bytes = committed.mem_bytes
+    msg_len = committed.msg_bytes
+
+    def ddt_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+        out = H.none_out()
+        offset = pkt.read_u32(args.pkt, pkt.SLMP_OFFSET).astype(jnp.int32)
+        lane = jnp.arange(pkt.MTU, dtype=jnp.int32)
+        msg_pos = offset + (lane - pkt.SLMP_PAYLOAD)
+        live = (lane >= pkt.SLMP_PAYLOAD) & (lane < args.pkt_len) \
+            & (msg_pos < msg_len)
+        mem_off = jnp.take(msg_to_mem, jnp.clip(msg_pos, 0, msg_len - 1))
+        region = (args.msg_id.astype(jnp.int32) % msgs_in_flight) * mem_bytes
+        dma_off = jnp.where(live, region + mem_off, -1)
+        out = H.spin_dma_scatter(out, dma_off, args.pkt)
+        out = H.add_msg_state(out, 1, args.pkt_len - pkt.SLMP_PAYLOAD)
+        # per-packet ACK when SYN set (window=1 mode in the paper's runs)
+        flags = pkt.read_u16(args.pkt, pkt.SLMP_FLAGS)
+        ack_data, ack_len = slmp._mk_ack(args.pkt, args.pkt_len)
+        syn = (flags & pkt.SLMP_FLAG_SYN) != 0
+        return out._replace(egress_data=ack_data,
+                            egress_len=jnp.where(syn, ack_len, 0),
+                            egress_valid=syn.astype(bool))
+
+    return ddt_packet_handler
+
+
+def make_ddt_context(committed: ddtlib.CommittedDDT, port: int = 9331,
+                     msgs_in_flight: int = 16, host_base: int = 0
+                     ) -> H.ExecutionContext:
+    return slmp.make_slmp_context(
+        port=port, host_base=host_base,
+        host_size=committed.mem_bytes * msgs_in_flight,
+        name="mpi_ddt",
+        packet_handler=make_ddt_packet_handler(committed, msgs_in_flight))

@@ -1,0 +1,38 @@
+"""Internet checksum — handler-side (vmappable) and batched-kernel forms.
+
+The paper's ICMP responder computes the RFC1071 checksum in portable C
+inside the packet handler; Fig 7 shows this dominates the RTT slope.  We
+provide:
+
+* ``internet_checksum_1`` — single-packet jnp form, used *inside* handlers
+  (vmapped by the VM, so it is effectively batched anyway);
+* the Pallas kernel path (:mod:`repro.kernels.checksum`) — the TPU-native
+  batched version used by benchmarks and the optimized responder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packet import MTU
+from repro.kernels.checksum import ops as checksum_ops  # re-export
+
+
+def internet_checksum_1(data: jax.Array, length: jax.Array, start: int
+                        ) -> jax.Array:
+    """Checksum of bytes [start, length) of one packet buffer (MTU,).
+
+    Bytes beyond ``length`` must be zero (PacketBatch invariant)."""
+    b = data.astype(jnp.uint32).reshape(MTU // 2, 2)
+    words = (b[:, 0] << 8) | b[:, 1]
+    w_iota = jnp.arange(MTU // 2, dtype=jnp.int32)
+    live = (w_iota >= start // 2) & (w_iota < (length + 1) // 2)
+    s = jnp.sum(jnp.where(live, words, 0))
+    s = (s & 0xFFFF) + (s >> 16)
+    s = (s & 0xFFFF) + (s >> 16)
+    return ((~s) & 0xFFFF).astype(jnp.uint32)
+
+
+def internet_checksum_batch(data, lengths, start: int, use_kernel=False):
+    return checksum_ops.internet_checksum(data, lengths, start=start,
+                                          use_kernel=use_kernel)

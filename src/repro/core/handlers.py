@@ -1,0 +1,178 @@
+"""The sPIN handler programming model and its vectorized execution VM.
+
+A user of sPIN writes up to three functions — *header-*, *packet-* and
+*tail-handler* (paper §III-A, §IV-C).  Here a handler is a pure JAX
+function
+
+    fn(args: HandlerArgs, user) -> HandlerOut
+
+executed for every matching packet.  ``user`` is the per-context constant
+state uploaded with the execution context (paper: handler code + host DMA
+regions; here: any pytree — e.g. the DDT index map for datatype
+processing).  The VM ``vmap``s the handler over the packet batch, so one
+"HPU" is a vector lane; the handler-visible API mirrors Table IV:
+
+    spin_send_packet   -> HandlerOut.egress_*
+    spin_dma (to host) -> HandlerOut.dma_off / dma_val (byte-granular
+                          scatter — this is the unaligned-write /
+                          WSTRB-address-recovery path of pspin_hostmem_dma)
+    spin_write_to_host -> write_u64_to_host helper
+    push_counter       -> HandlerOut.counter_*
+    cycles()           -> args.cycles
+    spin_lock_*        -> intentionally absent: the vectorized VM applies
+                          all effects by deterministic masked scatter, so
+                          per-packet critical sections cannot race.  Message
+                          state updates must be associative-commutative
+                          (true concurrent-HPU programs need the same
+                          discipline or locks).  See DESIGN.md §2.
+
+Ordering semantics: the VM runs three phases per batch — header handlers,
+then packet handlers, then tail handlers — and message state written by
+the header phase is visible to the packet phase (sPIN guarantee).  Packet
+handlers of one message run logically in parallel: their state updates are
+accumulated by segment-sum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packet import MTU
+
+MSG_STATE_DIM = 8        # int32 words of per-message handler state
+N_COUNTER_QUEUES = 4
+COUNTER_QUEUE_LEN = 64
+
+
+class HandlerArgs(NamedTuple):
+    """Per-packet arguments (the ``handler_args_t`` of the paper)."""
+    pkt: jax.Array        # (MTU,) uint8 — packet bytes in L1/L2
+    pkt_len: jax.Array    # () int32
+    msg_id: jax.Array     # () uint32
+    eom: jax.Array        # () bool
+    ctx: jax.Array        # () int32
+    msg_state: jax.Array  # (MSG_STATE_DIM,) int32
+    cycles: jax.Array     # () int32 — global cycle counter (cycles())
+
+
+class HandlerOut(NamedTuple):
+    """All effects a single handler invocation may produce."""
+    egress_data: jax.Array   # (MTU,) uint8
+    egress_len: jax.Array    # () int32
+    egress_valid: jax.Array  # () bool
+    dma_off: jax.Array       # (MTU,) int32 — host byte offsets, -1 = skip
+    dma_val: jax.Array       # (MTU,) uint8
+    state_delta: jax.Array   # (MSG_STATE_DIM,) int32 (associative add)
+    counter_queue: jax.Array  # () int32, -1 = none
+    counter_val: jax.Array    # () int32
+
+
+def none_out() -> HandlerOut:
+    return HandlerOut(
+        egress_data=jnp.zeros((MTU,), jnp.uint8),
+        egress_len=jnp.zeros((), jnp.int32),
+        egress_valid=jnp.zeros((), bool),
+        dma_off=jnp.full((MTU,), -1, jnp.int32),
+        dma_val=jnp.zeros((MTU,), jnp.uint8),
+        state_delta=jnp.zeros((MSG_STATE_DIM,), jnp.int32),
+        counter_queue=jnp.full((), -1, jnp.int32),
+        counter_val=jnp.zeros((), jnp.int32),
+    )
+
+
+# ----------------------------------------------------------------- runtime
+def spin_send_packet(out: HandlerOut, data: jax.Array, length) -> HandlerOut:
+    """Queue one egress packet (non-blocking send; paper spin_send_packet)."""
+    return out._replace(egress_data=data,
+                        egress_len=jnp.asarray(length, jnp.int32),
+                        egress_valid=jnp.ones((), bool))
+
+
+def spin_dma_to_host(out: HandlerOut, host_off, values: jax.Array,
+                     nbytes, src_start=0) -> HandlerOut:
+    """DMA ``values[src_start:src_start+nbytes]`` to host byte offset
+    ``host_off``.  Byte-granular => arbitrarily unaligned, mirroring the
+    unaligned-write support of pspin_hostmem_dma."""
+    k = values.shape[0]
+    lane = jnp.arange(k, dtype=jnp.int32)
+    live = (lane >= src_start) & (lane < src_start + nbytes)
+    off = jnp.where(live, host_off + (lane - src_start), -1).astype(jnp.int32)
+    # merge with existing ops (first-writer wins on overlapping lanes)
+    take = live & (out.dma_off[:k] < 0)
+    new_off = out.dma_off.at[:k].set(
+        jnp.where(take, off, out.dma_off[:k]))
+    new_val = out.dma_val.at[:k].set(
+        jnp.where(take, values, out.dma_val[:k]))
+    return out._replace(dma_off=new_off, dma_val=new_val)
+
+
+def spin_dma_scatter(out: HandlerOut, offsets: jax.Array, values: jax.Array
+                     ) -> HandlerOut:
+    """Fully general per-byte scatter DMA (offsets -1 = skip) — the DDT
+    unpack path.  offsets/values are (MTU,) arrays."""
+    return out._replace(dma_off=offsets.astype(jnp.int32), dma_val=values)
+
+
+def write_u64_to_host(out: HandlerOut, host_off, value) -> HandlerOut:
+    """spin_write_to_host: 64-bit little-endian word to host memory."""
+    v = jnp.asarray(value, jnp.uint64)
+    shifts = jnp.arange(8, dtype=jnp.uint64) * 8
+    data = ((v >> shifts) & jnp.uint64(0xFF)).astype(jnp.uint8)
+    return spin_dma_to_host(out, host_off, data, 8)
+
+
+def push_counter(out: HandlerOut, queue: int, value) -> HandlerOut:
+    """Enqueue a value into a host-readable FIFO (paper push_counter)."""
+    return out._replace(counter_queue=jnp.asarray(queue, jnp.int32),
+                        counter_val=jnp.asarray(value, jnp.int32))
+
+
+def add_msg_state(out: HandlerOut, index: int, delta) -> HandlerOut:
+    """Associative-commutative update of per-message state word ``index``."""
+    return out._replace(
+        state_delta=out.state_delta.at[index].add(
+            jnp.asarray(delta, jnp.int32)))
+
+
+HandlerFn = Callable[[HandlerArgs, Any], HandlerOut]
+
+
+def default_handler(args: HandlerArgs, user: Any) -> HandlerOut:
+    return none_out()
+
+
+@dataclasses.dataclass
+class ExecutionContext:
+    """Host-side execution context: fpspin_init(ctx, ruleset, handlers)."""
+    name: str
+    ruleset: Any                          # matching.Ruleset
+    header: HandlerFn = default_handler
+    packet: HandlerFn = default_handler
+    tail: HandlerFn = default_handler
+    user: Any = None                      # constant pytree (device arrays)
+    host_base: int = 0                    # base offset into host DMA buffer
+    host_size: int = 0
+    # message_mode=True: the protocol defines messages (header/tail handlers
+    # run, MPQ tracks state).  False: pure packet matching (sPIN layer-2
+    # mode — "simply execute the packet handler on every matching packet").
+    message_mode: bool = False
+
+
+def run_phase(fn: HandlerFn, args: HandlerArgs, user: Any,
+              mask: jax.Array) -> HandlerOut:
+    """vmap one handler over the batch and mask out non-participants."""
+    outs = jax.vmap(fn, in_axes=(0, None))(args, user)
+    n = mask.shape[0]
+    return HandlerOut(
+        egress_data=outs.egress_data,
+        egress_len=jnp.where(mask, outs.egress_len, 0),
+        egress_valid=outs.egress_valid & mask,
+        dma_off=jnp.where(mask[:, None], outs.dma_off, -1),
+        dma_val=outs.dma_val,
+        state_delta=jnp.where(mask[:, None], outs.state_delta, 0),
+        counter_queue=jnp.where(mask, outs.counter_queue, -1),
+        counter_val=jnp.where(mask, outs.counter_val, 0),
+    )

@@ -1,0 +1,127 @@
+"""Handler Execution Requests and the packet scheduler (paper §III-C, §IV-4).
+
+The ``pspin_her_gen`` module turns packet metadata (L2 address, size,
+message id, EOM flag, matched context) into a HER; the packet scheduler
+resolves the sPIN ordering dependencies — *header handlers are scheduled
+before packet handlers, tail handlers after* — and fans tasks out to the
+cluster schedulers / HPUs.
+
+In the batched TPU model a ``HERBatch`` carries one record per packet and
+the scheduler decides, per packet, whether the header handler must run
+(first packet of a not-yet-active message) and assigns an HPU lane.  The
+message-state table is the Message Processing Queue (MPQ) of the paper;
+FPsPIN uses 16 entries (Table I) — we default to the same and hash
+``(ctx, msg_id)`` into it.  An MPQ collision evicts the older message
+(documented deviation: real PsPIN back-pressures instead; our tests size
+the table to avoid collisions, and a counter records evictions so the
+condition is observable).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+MPQ_ENTRIES = 16           # Table I (FPsPIN column)
+N_CLUSTERS = 2             # Table I
+HPUS_PER_CLUSTER = 8       # PsPIN cluster = 8 PULP cores
+N_LANES = N_CLUSTERS * HPUS_PER_CLUSTER
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HERBatch:
+    ctx: jax.Array       # (N,) int32  matched execution context (-1: none)
+    addr: jax.Array      # (N,) int32  packet address in L2 buffer
+    size: jax.Array      # (N,) int32  packet length in bytes
+    msg_id: jax.Array    # (N,) uint32
+    eom: jax.Array       # (N,) bool
+    valid: jax.Array     # (N,) bool
+    lane: jax.Array      # (N,) int32  assigned HPU lane
+    slot: jax.Array      # (N,) int32  MPQ slot (message-state index)
+    run_header: jax.Array  # (N,) bool
+    run_tail: jax.Array    # (N,) bool
+
+    def tree_flatten(self):
+        return (self.ctx, self.addr, self.size, self.msg_id, self.eom,
+                self.valid, self.lane, self.slot, self.run_header,
+                self.run_tail), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MPQState:
+    """Active-message table (the Message Processing Queue)."""
+    key: jax.Array       # (S,) uint32 packed (ctx, msg_id) key
+    active: jax.Array    # (S,) bool
+    evictions: jax.Array  # () int32 — observability counter
+
+    def tree_flatten(self):
+        return (self.key, self.active, self.evictions), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_mpq(entries: int = MPQ_ENTRIES) -> MPQState:
+    return MPQState(key=jnp.zeros((entries,), jnp.uint32),
+                    active=jnp.zeros((entries,), bool),
+                    evictions=jnp.zeros((), jnp.int32))
+
+
+def _msg_key(ctx, msg_id):
+    # pack context into the top 4 bits; contexts are few (<16)
+    return (msg_id & jnp.uint32(0x0FFFFFFF)) | (
+        ctx.astype(jnp.uint32) << 28)
+
+
+def generate(mpq: MPQState, ctx, addr, size, msg_id, eom, valid,
+             n_lanes: int = N_LANES):
+    """HER generation + scheduling for one packet batch.
+
+    Decides header/tail handler execution and updates the MPQ.  Returns
+    (mpq, HERBatch).
+    """
+    n = ctx.shape[0]
+    entries = mpq.key.shape[0]
+    key = _msg_key(jnp.maximum(ctx, 0), msg_id)
+    slot = (key % jnp.uint32(entries)).astype(jnp.int32)
+
+    # first occurrence of each (ctx,msg) within this batch, in batch order
+    same = (key[:, None] == key[None, :]) & valid[:, None] & valid[None, :]
+    earlier = jnp.tril(jnp.ones((n, n), bool), k=-1)
+    first_in_batch = ~(same & earlier).any(axis=1)
+
+    # message already active in the MPQ?
+    mpq_hit = mpq.active[slot] & (mpq.key[slot] == key)
+    run_header = valid & first_in_batch & ~mpq_hit
+    run_tail = valid & eom
+
+    # MPQ update: activate started messages, deactivate completed ones.
+    # A slot collision (different key, slot active) evicts: count it.
+    evict = run_header & mpq.active[slot] & (mpq.key[slot] != key)
+    new_key = mpq.key.at[jnp.where(run_header, slot, entries)].set(
+        key, mode="drop")
+    new_active = mpq.active.at[jnp.where(run_header, slot, entries)].set(
+        True, mode="drop")
+    # EOM completes the message (tail handler runs in this batch)
+    done = run_tail & (new_key[slot] == key)
+    new_active = new_active.at[jnp.where(done, slot, entries)].set(
+        False, mode="drop")
+    new_mpq = MPQState(new_key, new_active,
+                       mpq.evictions + evict.sum().astype(jnp.int32))
+
+    # Lane assignment: cluster = slot parity (message affinity), round-robin
+    # HPUs inside the cluster — mirrors the two-level scheduler.
+    lane = (slot % N_CLUSTERS) * HPUS_PER_CLUSTER + (
+        jnp.cumsum(valid.astype(jnp.int32)) - 1) % HPUS_PER_CLUSTER
+    her = HERBatch(ctx=ctx, addr=addr, size=size, msg_id=msg_id, eom=eom,
+                   valid=valid, lane=lane.astype(jnp.int32), slot=slot,
+                   run_header=run_header, run_tail=run_tail)
+    return new_mpq, her

@@ -1,0 +1,103 @@
+"""Compute/communication overlap engine — the paper's §V-C on TPU.
+
+FPsPIN's headline result: offloaded MPI-datatype ingest overlaps ~96–98 %
+with a host matrix multiplication (Fig 10, R = T_MM / (T_MM + T_Poll)).
+The TPU-native equivalent: while train-step *t* computes, the sPIN ingest
+for step *t+1* (match → SLMP reassembly → DDT unpack) is already in
+flight.  Two mechanisms, both provided here:
+
+* **Pipelined dispatch** (``overlapped_loop``): ingest and compute are
+  separate jitted programs; JAX's asynchronous dispatch queues ingest for
+  batch t+1 before blocking on compute t.  On TPU these run on independent
+  device streams; the measured T_Poll is whatever the runtime could not
+  hide.  This mirrors the paper's host-polling measurement exactly.
+* **Fused step** (``fuse_ingest_into_step``): the ingest becomes part of
+  the train-step XLA program, letting the scheduler interleave the unpack
+  gathers with the first-layer compute (latency hiding by instruction
+  scheduling rather than streams).
+
+Both report the paper's metric:  R = T_MM / (T_MM + T_Poll).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, List, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class OverlapReport:
+    steps: int
+    t_mm_s: float          # time attributable to compute (blocked on it)
+    t_poll_s: float        # extra time blocked waiting for ingest
+    overlap_ratio: float   # R = T_MM / (T_MM + T_Poll)
+    wall_s: float
+
+    def row(self) -> str:
+        return (f"steps={self.steps} t_mm={self.t_mm_s * 1e3:.2f}ms "
+                f"t_poll={self.t_poll_s * 1e3:.2f}ms R={self.overlap_ratio:.4f}")
+
+
+def _block(x) -> None:
+    jax.block_until_ready(x)
+
+
+def sequential_loop(ingest: Callable, compute: Callable, feeds: List,
+                    state: Any) -> Tuple[Any, OverlapReport]:
+    """No overlap: ingest batch t, wait, compute batch t, wait."""
+    t_mm = t_poll = 0.0
+    w0 = time.perf_counter()
+    for feed in feeds:
+        t0 = time.perf_counter()
+        batch = ingest(feed)
+        _block(batch)
+        t1 = time.perf_counter()
+        state = compute(state, batch)
+        _block(state)
+        t2 = time.perf_counter()
+        t_poll += t1 - t0
+        t_mm += t2 - t1
+    wall = time.perf_counter() - w0
+    r = t_mm / max(t_mm + t_poll, 1e-12)
+    return state, OverlapReport(len(feeds), t_mm, t_poll, r, wall)
+
+
+def overlapped_loop(ingest: Callable, compute: Callable, feeds: List,
+                    state: Any) -> Tuple[Any, OverlapReport]:
+    """Double-buffered: ingest t+1 is dispatched before blocking on
+    compute t.  T_Poll counts only the time ingest was *not* hidden."""
+    t_mm = t_poll = 0.0
+    w0 = time.perf_counter()
+    batch = ingest(feeds[0])           # prologue (unavoidable first fill)
+    _block(batch)
+    for i, feed in enumerate(feeds):
+        state = compute(state, batch)              # async dispatch
+        if i + 1 < len(feeds):
+            nxt = ingest(feeds[i + 1])             # overlaps compute
+        t0 = time.perf_counter()
+        _block(state)                              # wait for compute
+        t1 = time.perf_counter()
+        if i + 1 < len(feeds):
+            _block(nxt)                            # leftover ingest time
+            batch = nxt
+        t2 = time.perf_counter()
+        t_mm += t1 - t0
+        t_poll += t2 - t1
+    wall = time.perf_counter() - w0
+    r = t_mm / max(t_mm + t_poll, 1e-12)
+    return state, OverlapReport(len(feeds), t_mm, t_poll, r, wall)
+
+
+def fuse_ingest_into_step(ingest_fn: Callable, step_fn: Callable
+                          ) -> Callable:
+    """Return step'(state, raw_feed) = step(state, ingest(raw_feed)) as one
+    XLA program (single jit).  Use with double buffering at the data level:
+    the caller feeds raw packet tensors; XLA schedules the unpack gathers
+    alongside the first matmuls."""
+
+    def fused(state, raw_feed):
+        return step_fn(state, ingest_fn(raw_feed))
+
+    return jax.jit(fused, donate_argnums=(0,))

@@ -1,0 +1,248 @@
+"""Packet representation and protocol header layouts.
+
+FPsPIN processes raw Ethernet frames.  We represent a batch of packets as a
+``PacketBatch``: a ``(N, MTU) uint8`` array plus a length vector and a
+validity mask.  All header fields live at the fixed byte offsets of
+paper Fig. 6:
+
+    Ethernet   bytes  0..13   (dst MAC 0:6, src MAC 6:12, ethertype 12:14)
+    IPv4       bytes 14..33   (proto @23, src @26:30, dst @30:34, csum @24:26)
+    ICMP       bytes 34..     (type @34, code @35, csum @36:38)
+    UDP        bytes 34..41   (sport @34:36, dport @36:38, len @38:40,
+                               csum @40:42)
+    SLMP       bytes 42..51   (flags u16 @42, msg_id u32 @44, offset u32 @48)
+    SLMP data  bytes 52..
+
+Multi-byte fields are big-endian (network byte order), matching the
+paper's matcher example (mask ``0xff00`` on word index 8 selects byte 34).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants (paper §IV: bimodal slot sizes; Ethernet MTU-sized frames).
+MTU = 1536                      # large-slot size == max frame we carry
+SMALL_SLOT = 128                # small-slot size
+WORDS = MTU // 4                # 32-bit words per packet, for the matcher
+
+# Header offsets (bytes).
+ETH_DST, ETH_SRC, ETH_TYPE = 0, 6, 12
+IP_BASE = 14
+IP_VER_IHL = 14
+IP_TOTLEN = 16
+IP_ID = 18
+IP_TTL = 22
+IP_PROTO = 23
+IP_CSUM = 24
+IP_SRC = 26
+IP_DST = 30
+L4_BASE = 34
+ICMP_TYPE = 34
+ICMP_CODE = 35
+ICMP_CSUM = 36
+UDP_SPORT = 34
+UDP_DPORT = 36
+UDP_LEN = 38
+UDP_CSUM = 40
+SLMP_BASE = 42
+SLMP_FLAGS = 42
+SLMP_MSGID = 44
+SLMP_OFFSET = 48
+SLMP_PAYLOAD = 52
+SLMP_HDR_BYTES = 10
+
+ETH_P_IP = 0x0800
+IPPROTO_ICMP = 1
+IPPROTO_UDP = 17
+ICMP_ECHO_REQUEST = 8
+ICMP_ECHO_REPLY = 0
+
+# SLMP flag bits (paper §V-B).
+SLMP_FLAG_SYN = 1 << 0
+SLMP_FLAG_ACK = 1 << 1
+SLMP_FLAG_EOM = 1 << 2
+
+MAX_SLMP_PAYLOAD = MTU - SLMP_PAYLOAD
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PacketBatch:
+    """A batch of raw frames. ``data[i, :length[i]]`` are the live bytes."""
+
+    data: jax.Array      # (N, MTU) uint8
+    length: jax.Array    # (N,) int32
+    valid: jax.Array     # (N,) bool
+
+    def tree_flatten(self):
+        return (self.data, self.length, self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    def words(self) -> jax.Array:
+        """(N, WORDS) uint32 big-endian word view, for the matching engine."""
+        return bytes_to_u32be(self.data)
+
+    @staticmethod
+    def empty(n: int) -> "PacketBatch":
+        return PacketBatch(
+            data=jnp.zeros((n, MTU), jnp.uint8),
+            length=jnp.zeros((n,), jnp.int32),
+            valid=jnp.zeros((n,), bool),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Endian helpers (all pure jnp; operate on uint8 byte arrays).
+
+def bytes_to_u32be(data: jax.Array) -> jax.Array:
+    """uint8 (..., 4k) -> uint32 (..., k) big-endian."""
+    b = data.astype(jnp.uint32).reshape(*data.shape[:-1], -1, 4)
+    return (b[..., 0] << 24) | (b[..., 1] << 16) | (b[..., 2] << 8) | b[..., 3]
+
+
+def bytes_to_u16be(data: jax.Array) -> jax.Array:
+    b = data.astype(jnp.uint32).reshape(*data.shape[:-1], -1, 2)
+    return ((b[..., 0] << 8) | b[..., 1]).astype(jnp.uint32)
+
+
+def read_u16(data: jax.Array, off: int) -> jax.Array:
+    """Big-endian u16 at static byte offset.  data: (..., bytes)."""
+    return (data[..., off].astype(jnp.uint32) << 8) | data[..., off + 1]
+
+
+def read_u32(data: jax.Array, off: int) -> jax.Array:
+    return (
+        (data[..., off].astype(jnp.uint32) << 24)
+        | (data[..., off + 1].astype(jnp.uint32) << 16)
+        | (data[..., off + 2].astype(jnp.uint32) << 8)
+        | data[..., off + 3].astype(jnp.uint32)
+    )
+
+
+def write_u16(data: jax.Array, off: int, val) -> jax.Array:
+    val = jnp.asarray(val, jnp.uint32)
+    data = data.at[..., off].set((val >> 8).astype(jnp.uint8))
+    return data.at[..., off + 1].set((val & 0xFF).astype(jnp.uint8))
+
+
+def write_u32(data: jax.Array, off: int, val) -> jax.Array:
+    val = jnp.asarray(val, jnp.uint32)
+    for i in range(4):
+        data = data.at[..., off + i].set(
+            ((val >> (24 - 8 * i)) & 0xFF).astype(jnp.uint8))
+    return data
+
+
+def swap_bytes(data: jax.Array, a: int, b: int, n: int) -> jax.Array:
+    """Swap byte ranges [a, a+n) and [b, b+n) (used to swap MAC/IP/ports)."""
+    va = data[..., a:a + n]
+    vb = data[..., b:b + n]
+    data = jax.lax.dynamic_update_slice_in_dim(data, vb, a, axis=-1)
+    return jax.lax.dynamic_update_slice_in_dim(data, va, b, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Frame builders (host-side, numpy) — used by tests, benchmarks, examples
+# and the packetized data pipeline.  These produce wire-correct frames so
+# the matcher rules from the paper apply verbatim.
+
+def _np_u16(buf: np.ndarray, off: int, val: int) -> None:
+    buf[off] = (val >> 8) & 0xFF
+    buf[off + 1] = val & 0xFF
+
+
+def _np_u32(buf: np.ndarray, off: int, val: int) -> None:
+    for i in range(4):
+        buf[off + i] = (val >> (24 - 8 * i)) & 0xFF
+
+
+def internet_checksum_np(data: np.ndarray) -> int:
+    """RFC1071 ones-complement checksum of a byte array (numpy oracle)."""
+    if len(data) % 2:
+        data = np.concatenate([data, np.zeros(1, np.uint8)])
+    words = (data[0::2].astype(np.uint32) << 8) | data[1::2]
+    s = int(words.sum())
+    while s >> 16:
+        s = (s & 0xFFFF) + (s >> 16)
+    return (~s) & 0xFFFF
+
+
+def build_eth_ip(buf: np.ndarray, proto: int, payload_len: int,
+                 src_ip: int = 0x0A000001, dst_ip: int = 0x0A000002) -> None:
+    buf[ETH_DST:ETH_DST + 6] = np.arange(6, dtype=np.uint8) + 0x10
+    buf[ETH_SRC:ETH_SRC + 6] = np.arange(6, dtype=np.uint8) + 0x20
+    _np_u16(buf, ETH_TYPE, ETH_P_IP)
+    buf[IP_VER_IHL] = 0x45
+    _np_u16(buf, IP_TOTLEN, 20 + payload_len)
+    _np_u16(buf, IP_ID, 1)
+    buf[IP_TTL] = 64
+    buf[IP_PROTO] = proto
+    _np_u32(buf, IP_SRC, src_ip)
+    _np_u32(buf, IP_DST, dst_ip)
+    _np_u16(buf, IP_CSUM, 0)
+    _np_u16(buf, IP_CSUM, internet_checksum_np(buf[IP_BASE:IP_BASE + 20]))
+
+
+def make_icmp_echo(payload: np.ndarray, seq: int = 0) -> np.ndarray:
+    """Wire-correct ICMP Echo-Request frame (numpy uint8, len 42+payload)."""
+    n = ICMP_CSUM + 6 + len(payload)
+    buf = np.zeros(n, np.uint8)
+    build_eth_ip(buf, IPPROTO_ICMP, 8 + len(payload))
+    buf[ICMP_TYPE] = ICMP_ECHO_REQUEST
+    _np_u16(buf, ICMP_CSUM + 2, 0x1234)      # identifier
+    _np_u16(buf, ICMP_CSUM + 4, seq)
+    buf[L4_BASE + 8:] = payload
+    _np_u16(buf, ICMP_CSUM, 0)
+    _np_u16(buf, ICMP_CSUM, internet_checksum_np(buf[L4_BASE:]))
+    return buf
+
+
+def make_udp(payload: np.ndarray, sport: int = 9999, dport: int = 9999
+             ) -> np.ndarray:
+    n = SLMP_BASE + len(payload)
+    buf = np.zeros(n, np.uint8)
+    build_eth_ip(buf, IPPROTO_UDP, 8 + len(payload))
+    _np_u16(buf, UDP_SPORT, sport)
+    _np_u16(buf, UDP_DPORT, dport)
+    _np_u16(buf, UDP_LEN, 8 + len(payload))
+    _np_u16(buf, UDP_CSUM, 0)                # paper: UDP csum omitted
+    buf[SLMP_BASE:] = payload
+    return buf
+
+
+def make_slmp(msg_id: int, offset: int, flags: int, payload: np.ndarray,
+              dport: int = 9330) -> np.ndarray:
+    """SLMP segment: 10-byte header inside the UDP payload (paper §V-B)."""
+    body = np.zeros(SLMP_HDR_BYTES + len(payload), np.uint8)
+    _np_u16(body, 0, flags)
+    _np_u32(body, 2, msg_id)
+    _np_u32(body, 6, offset)
+    body[SLMP_HDR_BYTES:] = payload
+    return make_udp(body, dport=dport)
+
+
+def stack_frames(frames: list, n: Optional[int] = None) -> PacketBatch:
+    """Pad a list of numpy frames into a PacketBatch (host-side)."""
+    n = n if n is not None else len(frames)
+    data = np.zeros((n, MTU), np.uint8)
+    length = np.zeros((n,), np.int32)
+    valid = np.zeros((n,), bool)
+    for i, f in enumerate(frames):
+        data[i, :len(f)] = f
+        length[i] = len(f)
+        valid[i] = True
+    return PacketBatch(jnp.asarray(data), jnp.asarray(length),
+                       jnp.asarray(valid))

@@ -1,0 +1,143 @@
+"""SLMP — the Simple Lossy Message Protocol of paper §V-B.
+
+10-byte header inside the UDP payload: FLAGS u16 {SYN, ACK, EOM},
+MSG_ID u32, OFFSET u32.  The receiver side is implemented *entirely in
+sPIN handlers* (as in the paper):
+
+  header handler : sets up the message context (marks active, zeroes the
+                   received-byte count in per-message state);
+  packet handler : DMAs the payload to host memory at ``OFFSET`` (the
+                   byte-granular, unaligned-capable hostmem path), counts
+                   received bytes, and answers SYN segments with an ACK;
+  tail handler   : pushes ``msg_id`` into counter queue 0 — the host
+                   completion notification.
+
+Sender-side segmentation and the window/flow-control policies (per-packet
+ACK with window=1 → in-order processing; windowed SYN on first/last for
+message-level reliability) are host-side utilities used by the file
+transfer example, the DDT pipeline and the Fig-8 benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import handlers as H
+from repro.core import matching
+from repro.core import packet as pkt
+
+COMPLETION_QUEUE = 0
+ACK_QUEUE = 1
+
+
+# ------------------------------------------------------------ receiver side
+def _mk_ack(data, length):
+    """Build an ACK from a received segment: swap L2/L3/L4 endpoints, set
+    ACK flag, drop the payload (header-only segment)."""
+    d = pkt.swap_bytes(data, pkt.ETH_DST, pkt.ETH_SRC, 6)
+    d = pkt.swap_bytes(d, pkt.IP_SRC, pkt.IP_DST, 4)
+    d = pkt.swap_bytes(d, pkt.UDP_SPORT, pkt.UDP_DPORT, 2)
+    flags = pkt.read_u16(d, pkt.SLMP_FLAGS)
+    d = pkt.write_u16(d, pkt.SLMP_FLAGS, flags | pkt.SLMP_FLAG_ACK)
+    d = pkt.write_u16(d, pkt.UDP_LEN, 8 + pkt.SLMP_HDR_BYTES)
+    d = pkt.write_u16(d, pkt.IP_TOTLEN, 20 + 8 + pkt.SLMP_HDR_BYTES)
+    # zero stale payload bytes beyond the new length
+    lane = jnp.arange(pkt.MTU, dtype=jnp.int32)
+    d = jnp.where(lane < pkt.SLMP_PAYLOAD, d, 0).astype(jnp.uint8)
+    return d, jnp.asarray(pkt.SLMP_PAYLOAD, jnp.int32)
+
+
+def slmp_header_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+    out = H.none_out()
+    # state[0] = active flag, state[1] = bytes received (assoc. counters)
+    out = H.add_msg_state(out, 0, 1)
+    return out
+
+
+def slmp_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+    out = H.none_out()
+    offset = pkt.read_u32(args.pkt, pkt.SLMP_OFFSET).astype(jnp.int32)
+    flags = pkt.read_u16(args.pkt, pkt.SLMP_FLAGS)
+    plen = args.pkt_len - pkt.SLMP_PAYLOAD
+    # payload -> host[offset : offset+plen]  (window=1 gives in-order)
+    lane = jnp.arange(pkt.MTU, dtype=jnp.int32)
+    live = (lane >= pkt.SLMP_PAYLOAD) & (lane < args.pkt_len)
+    dma_off = jnp.where(live, offset + (lane - pkt.SLMP_PAYLOAD), -1)
+    out = H.spin_dma_scatter(out, dma_off, args.pkt)
+    out = H.add_msg_state(out, 1, plen)
+    # SYN -> echo an ACK segment
+    ack_data, ack_len = _mk_ack(args.pkt, args.pkt_len)
+    syn = (flags & pkt.SLMP_FLAG_SYN) != 0
+    out = out._replace(
+        egress_data=ack_data,
+        egress_len=jnp.where(syn, ack_len, 0),
+        egress_valid=syn.astype(bool))
+    return out
+
+
+def slmp_tail_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+    out = H.none_out()
+    # completion notification: msg_id to the host FIFO
+    return H.push_counter(out, COMPLETION_QUEUE,
+                          args.msg_id.astype(jnp.int32))
+
+
+def make_slmp_context(port: int = 9330, host_base: int = 0,
+                      host_size: int = 1 << 20, name: str = "slmp",
+                      packet_handler=slmp_packet_handler,
+                      user=None) -> H.ExecutionContext:
+    return H.ExecutionContext(
+        name=name, ruleset=matching.ruleset_slmp(port),
+        header=slmp_header_handler, packet=packet_handler,
+        tail=slmp_tail_handler, user=user,
+        host_base=host_base, host_size=host_size, message_mode=True)
+
+
+# ------------------------------------------------------------- sender side
+@dataclasses.dataclass
+class SlmpSenderConfig:
+    window: int = 16            # segments in flight before waiting for ACKs
+    mtu_payload: int = pkt.MAX_SLMP_PAYLOAD
+    syn_every_packet: bool = True   # window-mode: every segment SYN+ACKed
+    port: int = 9330
+
+
+def segment_message(msg: np.ndarray, msg_id: int,
+                    cfg: SlmpSenderConfig) -> List[np.ndarray]:
+    """Split a message into SLMP segments (wire frames, numpy)."""
+    frames = []
+    n = len(msg)
+    nseg = max(1, (n + cfg.mtu_payload - 1) // cfg.mtu_payload)
+    for s in range(nseg):
+        off = s * cfg.mtu_payload
+        payload = msg[off:off + cfg.mtu_payload]
+        flags = 0
+        if cfg.syn_every_packet or s == 0 or s == nseg - 1:
+            flags |= pkt.SLMP_FLAG_SYN
+        if s == nseg - 1:
+            flags |= pkt.SLMP_FLAG_EOM
+        frames.append(pkt.make_slmp(msg_id, off, flags, payload,
+                                    dport=cfg.port))
+    return frames
+
+
+def parse_acks(batch: pkt.PacketBatch) -> List[tuple]:
+    """Host-side: extract (msg_id, offset) from ACK segments in a batch."""
+    data = np.asarray(batch.data)
+    valid = np.asarray(batch.valid)
+    acks = []
+    for i in range(len(valid)):
+        if not valid[i]:
+            continue
+        flags = (int(data[i, pkt.SLMP_FLAGS]) << 8) | int(
+            data[i, pkt.SLMP_FLAGS + 1])
+        if flags & pkt.SLMP_FLAG_ACK:
+            msg_id = int.from_bytes(bytes(data[i, pkt.SLMP_MSGID:
+                                               pkt.SLMP_MSGID + 4]), "big")
+            off = int.from_bytes(bytes(data[i, pkt.SLMP_OFFSET:
+                                            pkt.SLMP_OFFSET + 4]), "big")
+            acks.append((msg_id, off))
+    return acks

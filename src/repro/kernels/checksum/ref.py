@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the internet-checksum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def checksum_ref(data, lengths, start: int):
+    """data (N, MTU) uint8 (zero beyond lengths), lengths (N,) int32.
+
+    Ones-complement 16-bit checksum over bytes [start, lengths) per packet.
+    """
+    n, mtu = data.shape
+    b = data.astype(jnp.uint32).reshape(n, mtu // 2, 2)
+    words = (b[:, :, 0] << 8) | b[:, :, 1]
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, (n, mtu // 2), 1)
+    live = (w_iota >= start // 2) & (w_iota < (lengths[:, None] + 1) // 2)
+    s = jnp.sum(jnp.where(live, words, 0), axis=1)
+    s = (s & 0xFFFF) + (s >> 16)
+    s = (s & 0xFFFF) + (s >> 16)
+    return ((~s) & 0xFFFF).astype(jnp.uint32)

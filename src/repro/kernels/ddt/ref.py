@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for ddt_gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ddt_gather_ref(src, idx, fill=0):
+    """out[i] = src[idx[i]] if idx[i] >= 0 else fill."""
+    s = src.shape[0]
+    safe = jnp.clip(idx, 0, s - 1)
+    vals = jnp.take(src, safe, axis=0)
+    return jnp.where(idx >= 0, vals, jnp.asarray(fill, src.dtype))

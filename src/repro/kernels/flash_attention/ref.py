@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (H, Sq, D); k, v (H, Sk, D).  Plain materialized softmax."""
+    h, sq, d = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("hqd,htd->hqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    o = jnp.einsum("hqt,htd->hqd", p, v.astype(jnp.float32))
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return (o / denom).astype(q.dtype)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for the FPsPIN U32 matching engine (paper §IV block 1).
+
+The hardware matcher inspects one 32-bit word per rule; a ruleset is
+3 match rules + 1 EOM rule with an AND/OR combiner.  On TPU we evaluate
+*all contexts × all rules* for a block of packets at once, entirely in the
+VPU (bitwise ops + compares, no MXU):
+
+  grid:   (N // BLOCK_N,)
+  VMEM:   words  (BLOCK_N, W) uint32   -- the packet word view
+          rules  (C, 4, 4)    uint32   -- replicated to every block
+          modes  (1, C)       int32
+  out:    matched, eom  (BLOCK_N, C) int32
+
+Word selection (``words[:, idx[c, r]]``) is done with a broadcasted-iota
+compare-and-sum instead of a dynamic gather: the index is a scalar per
+(context, rule), so ``sum(where(iota == idx, words, 0), axis=-1)`` is a
+single masked row-reduction — the idiomatic Mosaic-friendly form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _matcher_kernel(words_ref, rules_ref, modes_ref, matched_ref, eom_ref,
+                    *, n_ctx: int):
+    words = words_ref[...]                        # (BN, W) uint32
+    rules = rules_ref[...]                        # (C, 4, 4) uint32
+    modes = modes_ref[...]                        # (1, C) int32
+    bn, w = words.shape
+    w_iota = jax.lax.broadcasted_iota(jnp.uint32, (bn, w), 1)
+
+    match_cols = []
+    eom_cols = []
+    for c in range(n_ctx):
+        oks = []
+        for r in range(4):
+            idx = rules[c, r, 0]
+            mask = rules[c, r, 1]
+            start = rules[c, r, 2]
+            end = rules[c, r, 3]
+            # select word `idx` from each packet (exactly one lane matches)
+            sel = jnp.sum(jnp.where(w_iota == idx, words, jnp.uint32(0)),
+                          axis=1)
+            v = sel & mask
+            oks.append((v >= start) & (v <= end))
+        and_mode = oks[0] & oks[1] & oks[2]
+        or_mode = oks[0] | oks[1] | oks[2]
+        is_and = modes[0, c] == 0
+        match_cols.append(jnp.where(is_and, and_mode, or_mode))
+        eom_cols.append(oks[3])
+    matched_ref[...] = jnp.stack(match_cols, axis=1).astype(jnp.int32)
+    eom_ref[...] = jnp.stack(eom_cols, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def match_pallas(words: jax.Array, rules: jax.Array, modes: jax.Array,
+                 block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """words (N, W) uint32, rules (C,4,4) uint32, modes (C,) int32.
+
+    Returns (matched, eom): (N, C) int32 each. N must be a multiple of
+    block_n (ops.py pads).
+    """
+    n, w = words.shape
+    c = rules.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    out_shape = [jax.ShapeDtypeStruct((n, c), jnp.int32)] * 2
+    kernel = functools.partial(_matcher_kernel, n_ctx=c)
+    matched, eom = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((c, 4, 4), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(words, rules, modes.reshape(1, -1))
+    return matched, eom

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the matching engine kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def match_ref(words, rules, modes):
+    """words (N, W) uint32; rules (C, 4, 4) uint32; modes (C,) int32.
+
+    Returns (matched, eom) as (N, C) bool arrays.
+    """
+    idx = rules[:, :, 0].astype(jnp.int32)       # (C, 4)
+    mask = rules[:, :, 1]
+    start = rules[:, :, 2]
+    end = rules[:, :, 3]
+    w = words.shape[1]
+    sel = jnp.take(words, jnp.clip(idx, 0, w - 1), axis=1)   # (N, C, 4)
+    v = sel & mask[None]
+    ok = (v >= start[None]) & (v <= end[None])               # (N, C, 4)
+    and_mode = ok[..., 0] & ok[..., 1] & ok[..., 2]
+    or_mode = ok[..., 0] | ok[..., 1] | ok[..., 2]
+    matched = jnp.where(modes[None, :] == 0, and_mode, or_mode)
+    return matched, ok[..., 3]

@@ -1,0 +1,476 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  * build the step function (train_step / prefill / serve_step),
+  * ``jax.jit(step, in_shardings=…).lower(**ShapeDtypeStructs)``,
+  * ``.compile()`` — SPMD partitioning for 256 (single-pod 16×16) or
+    512 chips (2×16×16 multi-pod) must succeed,
+  * record ``memory_analysis()`` / ``cost_analysis()`` + parsed collective
+    bytes → roofline terms (launch/roofline.py),
+  * write one JSON row per cell under experiments/dryrun/.
+
+Scan-trip-count correction: XLA's cost analysis counts a while-loop body
+once, so the layer-period scan under-reports FLOPs/bytes/collectives by
+~n_periods.  We additionally lower a **one-period probe** (same shardings,
+fwd+bwd for train) and correct:  X_true = X_top + (T-1) · X_probe.
+Attention block loops are statically unrolled during dry-run lowering
+(models.attention.STATIC_BLOCKS) with exact masked-block skipping, so
+causal/windowed sparsity is reflected in the counts.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.models import attention as attn_mod
+from repro.models import model as mlib
+from repro.models.model import build_model
+from repro.parallel import sharding as shlib
+from repro.train import optimizer as opt
+
+attn_mod.STATIC_BLOCKS = True      # exact block-sparse cost accounting
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# FSDP needed to fit the 1T model; the 15B dense also benefits.
+FSDP_ARCHS = {"kimi-k2-1t-a32b", "nemotron-4-15b"}
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def analytic_bytes_per_device(tree, shardings, mesh) -> float:
+    """Sum of leaf bytes divided by each leaf's shard count."""
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        nbytes = n * jnp.dtype(leaf.dtype).itemsize
+        factor = 1
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                factor *= mesh.shape[ax]
+        total += nbytes / factor
+    return total
+
+
+def _compile_and_cost(fn, args, mesh):
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = dict(ca) if ca else {}
+    except Exception:                                  # noqa: BLE001
+        pass
+    hlo = compiled.as_text()
+    coll = rf.collective_bytes_from_hlo(hlo)
+    return compiled, cost, coll, hlo
+
+
+# ===================================================================== cells
+def build_cell(arch: str, shape_name: str, mesh, fsdp: bool,
+               overrides: Optional[dict] = None,
+               manual_dp: bool = False, pure_dp: bool = False):
+    """Returns (jitted_fn, example_args (SDS), state_trees, tokens, cfg,
+    model, kind).  ``overrides`` are ModelConfig field replacements (the
+    §Perf hillclimb knobs: remat, logits_dtype, moe_capacity_factor…);
+    ``manual_dp`` swaps in the int8-compressed explicit-DP train step."""
+    import dataclasses as _dc
+    cfg = configs.get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    model = build_model(cfg)
+    kind, batch = shp.input_specs(cfg, shape_name, concrete=False)
+    suite = shp.SHAPES[shape_name]
+
+    params_s = model.init_eval()
+    if pure_dp:
+        pshard = shlib.param_shardings_puredp(params_s, cfg, mesh)
+    else:
+        pshard = shlib.param_shardings(params_s, cfg, mesh, fsdp=fsdp)
+
+    if kind == "train" and manual_dp:
+        from repro.train import manual_dp as mdp
+        ocfg = opt.OptConfig()
+        opt_s = jax.eval_shape(opt.init, params_s)
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+        err_s = mdp.error_state_init(params_s, n_shards)
+        fn, (pshard2, oshard, eshard, bshard) = mdp.build(
+            model, mesh, ocfg, batch)
+        args = (params_s, opt_s, err_s, batch)
+        state_bytes = [(params_s, pshard2), (opt_s.mu, pshard2),
+                       (opt_s.nu, pshard2), (err_s, eshard)]
+        tokens = suite.seq_len * suite.global_batch
+        return fn, args, state_bytes, tokens, cfg, model, kind
+
+    if kind == "train":
+        ocfg = opt.OptConfig()
+        opt_s = jax.eval_shape(opt.init, params_s)
+        oshard = opt.OptState(mu=pshard, nu=pshard,
+                              step=shlib.replicated(mesh))
+        bshard = (shlib.batch_shardings_puredp(batch, mesh) if pure_dp
+                  else shlib.batch_shardings(batch, mesh))
+
+        def step(params, opt_state, b):
+            def loss_fn(p):
+                loss, m = model.loss_fn(p, b)
+                return loss, m
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            p2, o2, om = opt.apply_updates(params, opt_state, grads, ocfg)
+            return p2, o2, dict(metrics, loss=loss, **om)
+
+        fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        args = (params_s, opt_s, batch)
+        state_bytes = [(params_s, pshard), (opt_s.mu, pshard),
+                       (opt_s.nu, pshard)]
+        tokens = suite.seq_len * suite.global_batch
+    elif kind == "prefill":
+        bshard = shlib.batch_shardings(batch, mesh)
+
+        def step(params, b):
+            return model.prefill(params, b, max_len=suite.seq_len)
+
+        fn = jax.jit(step, in_shardings=(pshard, bshard))
+        args = (params_s, batch)
+        state_bytes = [(params_s, pshard)]
+        tokens = suite.seq_len * suite.global_batch
+    else:  # decode
+        cache_s = jax.eval_shape(
+            lambda: model.init_cache(suite.global_batch, suite.seq_len))
+        cshard = shlib.cache_shardings(
+            cache_s, cfg, mesh,
+            long_context=(shape_name == "long_500k"))
+
+        def step(params, tokens_, cache, pos):
+            logits, cache2 = model.decode_step(params, tokens_, cache, pos)
+            return jnp.argmax(logits, -1), cache2
+
+        fn = jax.jit(step,
+                     in_shardings=(pshard,
+                                   shlib.batch_shardings(batch["tokens"],
+                                                         mesh),
+                                   cshard, shlib.replicated(mesh)),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,))
+        args = (params_s, batch["tokens"], cache_s, batch["pos"])
+        state_bytes = [(params_s, pshard), (cache_s, cshard)]
+        tokens = suite.global_batch      # one token per sequence
+    return fn, args, state_bytes, tokens, cfg, model, kind
+
+
+# ===================================================================== probe
+def build_probe(model, cfg, kind: str, shape_name: str, mesh, fsdp: bool,
+                pure_dp: bool = False):
+    """One-period probe with the cell's shardings; costs ×(T-1) correct the
+    scan-once undercount.  Returns (jitted_fn, args) or None."""
+    t = model.n_periods
+    if t <= 1:
+        return None
+    suite = shp.SHAPES[shape_name]
+    pattern = model.pattern
+    params_s = model.init_eval()
+    sliced = [jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), pb)
+        for pb in params_s["scan_blocks"]]
+    if pure_dp:
+        pshard = tuple(shlib.param_shardings_puredp(pb, cfg, mesh)
+                       for pb in sliced)
+    else:
+        pshard = tuple(shlib.param_shardings(pb, cfg, mesh, fsdp=fsdp)
+                       for pb in sliced)
+    b = suite.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    baxes = (tuple(a for a in ("pod", "data", "model")
+                   if a in mesh.shape) if pure_dp
+             else shlib.batch_axes(mesh))
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    bspec = baxes if b % nb == 0 else None
+    if bspec is not None and len(bspec) == 1:
+        bspec = bspec[0]
+
+    if kind in ("train", "prefill"):
+        s = suite.seq_len
+        h_s = jax.ShapeDtypeStruct((b, s, d), dt)
+        h_sh = NamedSharding(mesh, P(bspec, None, None))
+        extra_args, extra_sh = (), ()
+        if cfg.family == "encdec":
+            extra_args = (jax.ShapeDtypeStruct((b, cfg.enc_seq, d), dt),)
+            extra_sh = (NamedSharding(mesh, P(bspec, None, None)),)
+
+        def probe(blocks, h, *extra):
+            enc_out = extra[0] if extra else None
+            if cfg.mrope:
+                positions = jnp.broadcast_to(
+                    jnp.arange(s, dtype=jnp.int32), (3, b, s))
+            else:
+                positions = jnp.broadcast_to(
+                    jnp.arange(s, dtype=jnp.int32), (b, s))
+
+            def lf(blocks, h):
+                aux = jnp.zeros((), jnp.float32)
+                for pos, kindk in enumerate(pattern):
+                    h, a, _ = mlib._block_apply_train(
+                        blocks[pos], cfg, kindk, h, positions,
+                        enc_out=enc_out)
+                    aux = aux + a
+                return h.astype(jnp.float32).sum() + aux
+
+            if kind == "train":
+                return jax.grad(lf, argnums=(0, 1))(blocks, h)
+            return lf(blocks, h)
+
+        fn = jax.jit(probe, in_shardings=(pshard, h_sh) + extra_sh)
+        return fn, (tuple(sliced), h_s) + extra_args
+
+    # decode probe
+    cache_s = jax.eval_shape(
+        lambda: model.init_cache(b, suite.seq_len))
+    csliced = tuple(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), cb)
+        for cb in cache_s["scan"])
+    cshard = tuple(shlib.cache_shardings(
+        cb, cfg, mesh, long_context=(shape_name == "long_500k"))
+        for cb in csliced)
+    h_s = jax.ShapeDtypeStruct((b, 1, d), dt)
+    h_sh = NamedSharding(mesh, P(bspec, None, None))
+
+    def probe(blocks, caches, h, pos):
+        positions = model.decode_positions(pos, b)
+        new_caches = []
+        for i, kindk in enumerate(pattern):
+            h, c = mlib._block_apply_decode(
+                blocks[i], cfg, kindk, h, caches[i], pos,
+                positions=positions, enc_len=None)
+            new_caches.append(c)
+        return h, tuple(new_caches)
+
+    fn = jax.jit(probe,
+                 in_shardings=(pshard, cshard, h_sh,
+                               shlib.replicated(mesh)),
+                 out_shardings=(h_sh, cshard),
+                 donate_argnums=(1,))
+    return fn, (tuple(sliced), csliced, h_s,
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ===================================================================== run
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             fsdp: Optional[bool] = None, verbose: bool = True,
+             with_probe: bool = True, overrides: Optional[dict] = None,
+             variant: str = "", manual_dp: bool = False,
+             pure_dp: bool = False) -> dict:
+    ok, reason = shp.cell_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+    multi = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = int(np.prod(list(mesh.shape.values())))
+    if fsdp is None:
+        fsdp = arch in FSDP_ARCHS
+    t0 = time.time()
+    fn, args, state_bytes, tokens, cfg, model, kind = build_cell(
+        arch, shape_name, mesh, fsdp, overrides, manual_dp=manual_dp,
+        pure_dp=pure_dp)
+    compiled, cost, coll, hlo = _compile_and_cost(fn, args, mesh)
+    t_compile = time.time() - t0
+
+    # ---- probe correction for the layer-period scan
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(coll["total"])
+    probe_info = None
+    if with_probe and model.n_periods > 1:
+        pr = build_probe(model, cfg, kind, shape_name, mesh, fsdp,
+                         pure_dp=pure_dp)
+        if pr is not None:
+            pfn, pargs = pr
+            _, pcost, pcoll, _ = _compile_and_cost(pfn, pargs, mesh)
+            k = model.n_periods - 1
+            pf = float(pcost.get("flops", 0.0))
+            pb = float(pcost.get("bytes accessed", 0.0))
+            pc = float(pcoll["total"])
+            flops += k * pf
+            byt += k * pb
+            coll_total += k * pc
+            probe_info = {"periods": model.n_periods, "probe_flops": pf,
+                          "probe_bytes": pb, "probe_collective_bytes": pc}
+
+    # ---- memory analysis (advisory on CPU backend) + analytic accounting
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    ma, "generated_code_size_in_bytes", 0),
+            }
+    except Exception:                                  # noqa: BLE001
+        pass
+    analytic = sum(analytic_bytes_per_device(t, s, mesh)
+                   for t, s in state_bytes)
+
+    terms = rf.derive(arch, shape_name, mesh_name, chips, flops, byt,
+                      coll_total, cfg, tokens,
+                      bytes_per_device=analytic,
+                      note="fsdp" if fsdp else "",
+                      fwd_only=(kind != "train"))
+    row = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips, "fsdp": fsdp, "kind": kind,
+        "variant": variant, "overrides": overrides or {},
+        "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))
+                          and k in ("flops", "bytes accessed",
+                                    "transcendentals")},
+        "probe": probe_info,
+        "memory_analysis": mem,
+        "analytic_state_bytes_per_device": analytic,
+        "fits_v5e_hbm_16g": bool(analytic < 16e9),
+        "collectives": coll,
+        "roofline": terms.row(),
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+              f"(compile {t_compile:.1f}s, "
+              f"state/device {analytic/1e9:.2f} GB, "
+              f"bottleneck {terms.bottleneck}, "
+              f"useful {terms.useful_ratio:.2f})")
+        if mem:
+            print(f"         memory_analysis: {mem}")
+    return row
+
+
+def cell_path(arch, shape, mesh_name, variant: str = ""):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    return os.path.join(OUT_DIR,
+                        f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--no-probe", action="store_true")
+    # §Perf hillclimb knobs — recorded as a named variant
+    ap.add_argument("--variant", default="",
+                    help="tag for experiments/dryrun/<cell>__<variant>.json")
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "dots", "full"])
+    ap.add_argument("--logits-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--block-q", type=int, default=None)
+    ap.add_argument("--block-k", type=int, default=None)
+    ap.add_argument("--pad-vocab", type=int, default=None)
+    ap.add_argument("--scores-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--manual-dp-int8", action="store_true",
+                    help="explicit shard_map DP with int8 EF all-reduce")
+    ap.add_argument("--ablate-mixer", action="store_true",
+                    help="diagnostic: skip attention/ssm mixers")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="no-TP layout: batch over both axes + ZeRO-3")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.remat is not None:
+        overrides["remat"] = args.remat
+    if args.logits_dtype is not None:
+        overrides["logits_dtype"] = args.logits_dtype
+    if args.capacity_factor is not None:
+        overrides["moe_capacity_factor"] = args.capacity_factor
+    if args.block_q is not None:
+        overrides["attn_block_q"] = args.block_q
+    if args.block_k is not None:
+        overrides["attn_block_k"] = args.block_k
+    if args.pad_vocab is not None:
+        overrides["pad_vocab_multiple"] = args.pad_vocab
+    if args.scores_dtype is not None:
+        overrides["attn_scores_dtype"] = args.scores_dtype
+    if args.ablate_mixer:
+        overrides["ablate_mixer"] = True
+
+    archs = configs.ARCHS if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(shp.SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                path = cell_path(arch, shape, mesh_name, args.variant)
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] cached: {path}")
+                    continue
+                try:
+                    row = run_cell(arch, shape, mesh_name, fsdp=fsdp,
+                                   with_probe=not args.no_probe,
+                                   overrides=overrides or None,
+                                   variant=args.variant,
+                                   manual_dp=args.manual_dp_int8,
+                                   pure_dp=args.pure_dp)
+                except Exception as e:                 # noqa: BLE001
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape,
+                           "mesh": mesh_name, "status": "FAILED",
+                           "variant": args.variant,
+                           "error": str(e)[-2000:]}
+                    failures.append((arch, shape, mesh_name))
+                with open(path, "w") as f:
+                    json.dump(row, f, indent=1)
+    if failures:
+        print("FAILED cells:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Per (arch × shape × mesh):
+
+  compute term    = HLO_FLOPs            / (chips × 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes_accessed   / (chips × 819e9  B/s HBM)
+  collective term = collective_bytes     / (chips × 50e9   B/s ICI link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are *not* in cost_analysis: we parse the post-SPMD HLO text and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  Shapes in the partitioned module are
+per-device, so the summed per-device collective bytes divided by the link
+bandwidth directly gives seconds-per-device (the ×chips in numerator and
+denominator cancel).
+
+Also derives MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPS (remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (given)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape like  bf16[16,512,128]{2,1,0}  or  f32[] or tuple (...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device operand bytes of collective ops, by op kind.
+
+    Matches lines like:
+      %ag = bf16[2048,512] all-gather(bf16[128,512] %x), ...
+    counting the *output* shape (bytes that cross the interconnect are
+    bounded by max(in, out); output is the conservative choice for
+    all-gather, input for reduce-scatter — we take max of both sides).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-shape = op-name(args)
+        for kind in _COLLECTIVES:
+            # match ` = <shape> kind(` and `kind-start(` variants
+            m = re.search(r"=\s+(.+?)\s+" + kind + r"(?:-start)?\(", s)
+            if m:
+                lhs_bytes = _shape_bytes(m.group(1))
+                args = s[m.end():]
+                rhs_bytes = _shape_bytes(args)
+                out[kind] += max(lhs_bytes, rhs_bytes)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float           # per-device sum
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+    bytes_per_device: Optional[float] = None
+    note: str = ""
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, tokens: int, fwd_only: bool = False
+                ) -> float:
+    """6·N·D (train: fwd 2ND + bwd 4ND) or 2·N·D (prefill/decode, forward
+    only), N = active params (MoE: routed top-k + shared only)."""
+    n_active = cfg.param_count(active_only=True)
+    return (2.0 if fwd_only else 6.0) * n_active * tokens
+
+
+def derive(arch: str, shape: str, mesh_name: str, chips: int,
+           flops: float, byt: float, collective_bytes: float,
+           cfg: ModelConfig, tokens: int,
+           bytes_per_device: Optional[float] = None,
+           note: str = "", fwd_only: bool = False) -> RooflineTerms:
+    # cost_analysis on the partitioned module reports per-device numbers;
+    # per-device seconds = per-device work / per-chip rate.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byt / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    mf = model_flops(cfg, tokens, fwd_only=fwd_only)
+    useful = mf / max(flops * chips, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byt, collective_bytes=collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=mf, useful_ratio=useful, bottleneck=bottleneck,
+        bytes_per_device=bytes_per_device, note=note)
+
+
+def to_markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | MODEL_FLOPS/HLO | note |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.3f} | {r.get('note','')} |")
+    return "\n".join(lines)

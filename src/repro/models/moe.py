@@ -1,0 +1,127 @@
+"""Mixture-of-Experts layer with sort-based dispatch (qwen2-moe, kimi-k2).
+
+Dispatch is the capacity-bounded sort/scatter formulation: token→expert
+assignments are sorted by expert id, each expert keeps up to C tokens in a
+dense (E, C, d) buffer, expert FFNs run as one batched einsum with the
+expert dimension sharded over the ``model`` mesh axis (expert parallelism
+— under pjit the gather/scatter of tokens to expert shards lowers to
+all-to-all collectives), and results are combined with the router weights.
+Dropped tokens (rank ≥ C) fall through with weight renormalization.
+
+The expert count is zero-padded to a multiple of 16 so EP divides the
+model axis (padded experts receive no tokens: the router only scores real
+experts).  Shared experts (qwen2-moe: 4×1408, kimi-k2: 1×2048) run densely
+for every token.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+EP_PAD_MULTIPLE = 16
+
+
+def padded_experts(n_experts: int) -> int:
+    return ((n_experts + EP_PAD_MULTIPLE - 1) // EP_PAD_MULTIPLE) \
+        * EP_PAD_MULTIPLE
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    e_pad = padded_experts(cfg.n_experts)
+    ff = cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s_in, s_out = float(1 / np.sqrt(d)), float(1 / np.sqrt(ff))
+    p = {
+        "router": jax.random.normal(ks[0], (d, cfg.n_experts),
+                                    jnp.float32) * s_in,
+        "up": jax.random.normal(ks[1], (e_pad, d, ff), dt) * s_in,
+        "gate": jax.random.normal(ks[2], (e_pad, d, ff), dt) * s_in,
+        "down": jax.random.normal(ks[3], (e_pad, ff, d), dt) * s_out,
+    }
+    if cfg.n_shared_experts:
+        ffs = cfg.d_ff_shared * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "up": jax.random.normal(k1, (d, ffs), dt) * s_in,
+            "gate": jax.random.normal(k2, (d, ffs), dt) * s_in,
+            "down": jax.random.normal(k3, (ffs, d), dt) * float(1 / np.sqrt(ffs)),
+        }
+    return p
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array,
+              capacity_factor: float = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (y, aux_loss).
+
+    capacity_factor None -> cfg.moe_capacity_factor (training default);
+    decode paths pass n_experts (drop-free: a one-token step must never
+    lose its expert)."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    e_pad = p["up"].shape[0]
+    xt = x.reshape(t, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                 # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(top_e, e, dtype=jnp.float32).sum(1), axis=0)
+    mean_prob = probs.mean(axis=0)
+    aux = cfg.router_aux_coef * e * jnp.sum(density / k * mean_prob)
+
+    # ---- sort assignments by expert
+    tk = t * k
+    flat_e = top_e.reshape(tk)
+    flat_w = top_w.reshape(tk)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+
+    # rank of each assignment within its expert
+    counts = jnp.bincount(flat_e, length=e_pad)            # (E_pad,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(tk) - starts[se]
+
+    capacity = int(np.ceil(tk / e * capacity_factor))
+    keep = rank < capacity
+    slot = jnp.where(keep, se * capacity + rank, e_pad * capacity)
+
+    # ---- dispatch: (E_pad * C, d) buffer
+    buf = jnp.zeros((e_pad * capacity, d), x.dtype)
+    buf = buf.at[slot].set(xt[st], mode="drop")
+    buf = buf.reshape(e_pad, capacity, d)
+
+    # ---- expert FFN (EP: e dimension sharded over the model axis)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"],
+                   preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(h) * u).astype(x.dtype)
+    out = jnp.einsum("ecf,efd->ecd", act, p["down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # ---- combine: gather back and weight
+    out_flat = out.reshape(e_pad * capacity, d)
+    safe_slot = jnp.minimum(slot, e_pad * capacity - 1)
+    y_sorted = jnp.where(keep[:, None], out_flat[safe_slot], 0)
+    y = jnp.zeros((t, d), x.dtype)
+    y = y.at[st].add(y_sorted * sw[:, None].astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["gate"]) * (xt @ sp["up"])
+        y = y + hs @ sp["down"]
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t + b_r)                 (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)                 (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training runs the linear recurrence with ``jax.lax.associative_scan``
+(log-depth, O(S) work — this is the TPU-friendly counterpart of the
+hardware's sequential recurrence).  Decode is a single O(width) update —
+constant-size state, which is why this arch runs the 524 k decode cell.
+The temporal block follows Griffin: conv1d(width 4) in front of the RG-LRU
+and a GeLU-gated linear branch multiplied into its output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig):
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    w = cfg.lru_width
+    ks = jax.random.split(key, 6)
+    s = float(1 / np.sqrt(d))
+    sw = float(1 / np.sqrt(w))
+    # Lambda init so that a ~ Uniform(0.9, 0.999)^c-ish (Griffin init)
+    lam = -np.log(np.expm1(-np.log(np.random.RandomState(0)
+                                   .uniform(0.9, 0.999, w)) / _C))
+    return {
+        "w_x": jax.random.normal(ks[0], (d, w), dt) * s,
+        "w_gate": jax.random.normal(ks[1], (d, w), dt) * s,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, w), dt)
+        * float(1 / np.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_r": jax.random.normal(ks[3], (w, w), dt) * sw,
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": jax.random.normal(ks[4], (w, w), dt) * sw,
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.asarray(-lam, jnp.float32),
+        "out": jax.random.normal(ks[5], (w, d), dt) * sw,
+    }
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(xb @ p["w_r"] + p["b_r"].astype(xb.dtype))
+    i = jax.nn.sigmoid(xb @ p["w_i"] + p["b_i"].astype(xb.dtype))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = (i * xb).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, gated_x
+
+
+def _causal_conv(xb, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(xb, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + xb.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def rglru_apply_train(p, cfg: ModelConfig, x: jax.Array,
+                      return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model) [, decode cache]."""
+    xb_raw = x @ p["w_x"]
+    xb = _causal_conv(xb_raw, p["conv_w"], p["conv_b"])
+    a, gx = _gates(p, xb)                                   # (B,S,w) f32
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    y = (h.astype(x.dtype) * gate)
+    out = y @ p["out"]
+    if return_state:
+        k = p["conv_w"].shape[0]
+        tail = jnp.pad(xb_raw, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):]
+        return out, {"conv": tail, "h": h[:, -1]}
+    return out
+
+
+def rglru_decode_init(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_apply_decode(p, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d_model) -> (y, cache)."""
+    xb_raw = (x @ p["w_x"])[:, 0]                           # (B, w)
+    win = jnp.concatenate([cache["conv"], xb_raw[:, None]], axis=1)
+    xb = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    a, gx = _gates(p, xb)
+    h = a * cache["h"] + gx
+    gate = jax.nn.gelu((x @ p["w_gate"])[:, 0], approximate=True)
+    y = (h.astype(x.dtype) * gate) @ p["out"]
+    return y[:, None, :], {"conv": win[:, 1:], "h": h}

@@ -1,0 +1,198 @@
+"""Mamba-2 block: SSD (state-space duality) chunked training algorithm and
+the O(1)-state decode step (arXiv:2405.21060).
+
+Training uses the chunked SSD decomposition: within chunks of length Q the
+quadratic (attention-like) form computes intra-chunk outputs; chunk-level
+states are propagated by a short sequential scan (nc = S/Q steps); the
+inter-chunk contribution is one more batched einsum.  All state math in
+f32.  Decode carries (conv_state, ssd_state) and is O(d_inner·N) per
+token, which is what makes the 524k long-context cell tractable for this
+family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * ns                       # x, B, C go through the conv
+    ks = jax.random.split(key, 4)
+    s = float(1 / np.sqrt(d))
+    return {
+        # fused input projection: [z, xBC, dt]
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * di + 2 * ns + nh), dt) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                    dt) * float(1 / np.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.asarray(
+            np.log(np.linspace(1.0, 16.0, nh)), jnp.float32),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.linspace(1e-3, 0.1, nh))), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": jax.random.normal(ks[2], (di, d), dt) * float(1 / np.sqrt(di)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:2 * di + 2 * ns]
+    dt_raw = proj[..., 2 * di + 2 * ns:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width K.  xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            ).astype(y.dtype) * scale
+
+
+def ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """SSD over one sequence.
+
+    xh : (B, S, H, P) inputs per head
+    dt : (B, S, H)    discretization steps (softplus applied)
+    a  : (H,)         negative decay rates (A = -exp(a_log))
+    bmat, cmat: (B, S, N) input/output projections (single group)
+    Returns y (B, S, H, P), final_state (B, H, N, P).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # dt=0 on padding: decay exp(0)=1 and zero input -> state unchanged
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // q
+
+    da = dt * a                                            # (B, S, H)
+    xw = xh * dt[..., None]                                # dt-weighted input
+    dac = da.reshape(b, nc, q, h)
+    cum = jnp.cumsum(dac, axis=2)                          # (B,nc,Q,H)
+    total = cum[:, :, -1]                                  # (B,nc,H)
+
+    xc = xw.reshape(b, nc, q, h, p)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    # ---- intra-chunk (quadratic within chunk)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                        preferred_element_type=jnp.float32)  # (B,nc,Q,Q)
+    li = cum[:, :, :, None, :]                             # (B,nc,Q,1,H)
+    lj = cum[:, :, None, :, :]                             # (B,nc,1,Q,H)
+    decay = jnp.exp(jnp.clip(li - lj, -60, 0))             # i>=j valid
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         scores, l_mat, xc.astype(jnp.float32))
+
+    # ---- chunk states: S_c = sum_j exp(total - cum_j) B_j (dt_j x_j)^T
+    state_decay = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -60, 0))
+    s_local = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, state_decay,
+                         xc.astype(jnp.float32))           # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(jnp.clip(total, -60, 0))         # (B,nc,H)
+
+    def step(carry, inp):
+        s_prev = carry                                     # (B,H,N,P)
+        dec, loc = inp                                     # (B,H), (B,H,N,P)
+        s_new = s_prev * dec[..., None, None] + loc
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    final, s_before = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_local, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)                # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution: y_i += exp(cum_i) C_i . S_prev
+    in_decay = jnp.exp(jnp.clip(cum, -60, 0))              # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cc, in_decay, s_before)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig], final
+
+
+def ssm_apply_train(p, cfg: ModelConfig, x: jax.Array,
+                    return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model) [, decode cache]."""
+    b, s, _ = x.shape
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(b, s, nh, hp)
+    bmat = xbc[..., di:di + ns].astype(jnp.float32)
+    cmat = xbc[..., di + ns:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, final = ssd_chunked(xs, dt, a, bmat, cmat, cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        k = p["conv_w"].shape[0]
+        tail = jnp.pad(xbc_raw, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):]
+        return out, {"conv": tail, "ssd": final}
+    return out
+
+
+def ssm_decode_init(cfg: ModelConfig, batch: int, dtype):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * ns), dtype),
+        "ssd": jnp.zeros((batch, nh, ns, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def ssm_apply_decode(p, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d_model); cache {conv (B,K-1,C), ssd (B,H,N,P)}."""
+    b = x.shape[0]
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    proj = (x @ p["in_proj"])[:, 0]                       # (B, ...)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    # conv ring: window = [cache, xbc]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"])
+    new_conv = win[:, 1:]
+    xs = conv[..., :di].reshape(b, nh, hp)
+    bmat = conv[..., di:di + ns].astype(jnp.float32)
+    cmat = conv[..., di + ns:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a)                                  # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bmat, dt, xs.astype(jnp.float32))
+    s_new = cache["ssd"] * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat, s_new)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = _gated_norm(y, z[:, None, :], p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": new_conv, "ssd": s_new}

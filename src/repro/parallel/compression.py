@@ -1,0 +1,104 @@
+"""Gradient compression: int8 quantized data-parallel all-reduce with
+error feedback.
+
+At 1000+ node scale the data-parallel gradient all-reduce dominates the
+step's collective bytes (see EXPERIMENTS §Roofline: train cells are
+collective-bound for the small-d_model archs).  This module provides a
+drop-in compressed psum over the ``data`` axis:
+
+  q   = round(g / s) clipped to int8, s = max|g| / 127  (per-tensor scale)
+  e' += g - q*s                (error feedback, carried in CompressionState)
+  G   = psum(q) * mean(s)      (int8 payload on the wire, f32 accumulate)
+
+8 bits instead of 32/16 cuts all-reduce bytes 2–4×.  Error feedback makes
+the scheme unbiased over time (residuals re-enter the next step), the
+standard convergence guarantee for EF-SGD-style methods.
+
+Implementation notes: inside an automatically-partitioned (pjit) program
+one cannot intercept XLA's gradient psum, so the trainer uses this through
+``shard_map`` over the data axes — the gradients enter as per-device
+partials and the collective is explicit (``manual_dp`` mode in
+train/trainer.py).  Tested standalone against an uncompressed psum in
+tests/test_compression.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class CompressionState(NamedTuple):
+    error: Any            # pytree like grads, f32 residuals
+
+
+def init_state(grads_shape_tree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                           grads_shape_tree))
+
+
+def compress_psum_leaf(g: jax.Array, err: jax.Array, axis_names
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """One leaf inside shard_map: returns (mean-reduced g, new error).
+
+    Wire-true int8: the scale is shared across shards (one scalar pmax)
+    and chosen as max|g| / (127/n), so the *sum* of n int8 payloads never
+    exceeds ±127 — the all-reduce really moves 1 byte/element (vs 2 for
+    the bf16 baseline), with no wraparound.  The aggressive quantum
+    (⌊127/n⌋ levels per shard) is repaid by error feedback across steps.
+    """
+    g32 = g.astype(jnp.float32) + err
+    n = 1
+    for a in axis_names:
+        n = n * jax.lax.psum(1, a)
+    gmax = jnp.max(jnp.abs(g32))
+    if axis_names:
+        gmax = jax.lax.pmax(gmax, axis_names)
+    scale = jnp.maximum(gmax, 1e-12) / (127.0 / n)
+    lim = jnp.floor(127.0 / n)
+    q = jnp.clip(jnp.round(g32 / scale), -lim, lim).astype(jnp.int8)
+    new_err = g32 - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q, axis_names)          # int8 on the wire
+    return total.astype(jnp.float32) * scale / n, new_err
+
+
+def compressed_pmean(grads, error_tree, axis_names):
+    """Compressed mean-all-reduce of a gradient pytree (inside shard_map).
+    Returns (reduced grads, new error tree) — both plain pytrees so the
+    shard_map out_specs mirror the in_specs structure."""
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_tree)
+    out, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        r, ne = compress_psum_leaf(g, e, axis_names)
+        out.append(r)
+        errs.append(ne)
+    return (jax.tree.unflatten(tree, out),
+            jax.tree.unflatten(tree, errs))
+
+
+def make_compressed_allreduce(mesh: Mesh, grads_specs):
+    """shard_map-wrapped compressed gradient mean over the data axes.
+
+    grads enter sharded over (pod, data) on their batch-partial dimension
+    is not required — each device holds its *local* gradient (replicated
+    spec within the model axis); the wrapper performs the cross-data
+    reduction with int8 payload."""
+    from jax.experimental.shard_map import shard_map
+
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def fn(grads, err):
+        return compressed_pmean(grads, err, axes)
+
+    # gradients per-device partial: replicated spec (manual mode sees
+    # local shards); model-axis sharding stays untouched.
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(grads_specs, grads_specs),
+        out_specs=(grads_specs, grads_specs),
+        check_rep=False)

@@ -1,0 +1,296 @@
+"""Sharding rules: parameter / optimizer / activation / cache partitioning.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  ``pod`` and ``data`` are both data-parallel (batch shards over
+their product); ``model`` carries tensor/expert parallelism.
+
+Policy (MaxText-style, divisibility-gated):
+  * embeddings / lm_head        : vocab over ``model`` when divisible
+  * attention q/o               : head dim (as q_dim columns) over ``model``
+                                  when n_heads divides the axis; replicated
+                                  otherwise (documented per arch)
+  * attention k/v               : over ``model`` when n_kv_heads divides
+  * MLP up/gate/down            : d_ff over ``model`` (always divisible for
+                                  the assigned archs)
+  * MoE experts                 : expert dim over ``model`` (EP)
+  * mamba2 / rg-lru mixers      : lru/inner width over ``model`` where
+                                  divisible, else replicated
+  * FSDP (flag)                 : additionally shard the d_model dim of
+                                  matrices over ``data`` (ZeRO-3); XLA
+                                  inserts the all-gathers
+  * optimizer moments           : same spec as their parameter (+ FSDP)
+  * activations                 : batch over (pod, data)
+  * KV caches                   : batch over (pod, data) when divisible;
+                                  long-context (batch 1): cache sequence
+                                  over ``data`` (sequence parallelism)
+
+Stacked period-scan params carry a leading ``periods`` dim -> specs are
+right-aligned against the trailing dims.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh, fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf, by path suffix + shape."""
+    tp = _axis_size(mesh, "model")
+    dp = _axis_size(mesh, "data")
+
+    def fs(dim: int) -> Optional[str]:
+        """FSDP-shard helper for a d_model-sized dim."""
+        return "data" if (fsdp and _div(dim, dp)) else None
+
+    leaf = path.split("/")[-1]
+    base: Tuple[Optional[str], ...]
+
+    # ---- embeddings
+    if leaf == "tok":
+        v, d = shape[-2:]
+        base = ("model" if _div(v, tp) else None, fs(d))
+    elif leaf == "lm_head":
+        d, v = shape[-2:]
+        base = (fs(d), "model" if _div(v, tp) else None)
+    # ---- attention
+    elif leaf in ("wq", "wo", "bq") or "attn/" in path and leaf in ("wq",):
+        heads_ok = _div(cfg.n_heads, tp)
+        if leaf == "wq":
+            base = (fs(shape[-2]), "model" if heads_ok else None)
+        elif leaf == "wo":
+            base = ("model" if heads_ok else None, fs(shape[-1]))
+        else:                                     # bq
+            base = ("model" if heads_ok else None,)
+    elif leaf in ("wk", "wv", "bk", "bv"):
+        kv_ok = _div(cfg.n_kv_heads, tp)
+        if leaf in ("wk", "wv"):
+            base = (fs(shape[-2]), "model" if kv_ok else None)
+        else:
+            base = ("model" if kv_ok else None,)
+    elif leaf in ("q_norm", "k_norm"):
+        base = (None,)
+    # ---- MoE (shared-expert rules must precede the generic expert rule:
+    #      their path also contains "moe/")
+    elif "shared/" in path and leaf in ("up", "gate"):
+        base = (fs(shape[-2]), "model" if _div(shape[-1], tp) else None)
+    elif "shared/" in path and leaf == "down":
+        base = ("model" if _div(shape[-2], tp) else None, fs(shape[-1]))
+    elif "moe/" in path and leaf in ("up", "gate"):
+        base = ("model", fs(shape[-2]), None)     # EP over experts
+    elif "moe/" in path and leaf == "down":
+        base = ("model", None, fs(shape[-1]))
+    elif leaf == "router":
+        base = (None, None)
+    # ---- dense MLP
+    elif "mlp/" in path and leaf in ("up", "gate"):
+        base = (fs(shape[-2]), "model" if _div(shape[-1], tp) else None)
+    elif "mlp/" in path and leaf == "down":
+        base = ("model" if _div(shape[-2], tp) else None, fs(shape[-1]))
+    # ---- mamba2
+    elif leaf == "in_proj":
+        base = (fs(shape[-2]), None)              # mixed segments: replicate
+    elif leaf == "out_proj":
+        base = ("model" if _div(shape[-2], tp) else None, fs(shape[-1]))
+    elif leaf in ("conv_w", "conv_b", "a_log", "dt_bias", "d_skip", "norm"):
+        base = tuple(None for _ in range(min(len(shape), 2)))
+    # ---- rg-lru
+    elif leaf in ("w_x", "w_gate"):
+        base = (fs(shape[-2]), "model" if _div(cfg.lru_width, tp) else None)
+    elif leaf in ("w_r", "w_i"):
+        base = (None, "model" if _div(cfg.lru_width, tp) else None)
+    elif leaf in ("b_r", "b_i", "lam"):
+        base = ("model" if _div(cfg.lru_width, tp) else None,)
+    elif leaf == "out":
+        base = ("model" if _div(cfg.lru_width, tp) else None, fs(shape[-1]))
+    # ---- norms & scalars
+    elif leaf == "scale" or len(shape) <= 1:
+        base = (None,) * min(len(shape), 1)
+    else:
+        base = (None,) * len(shape)
+
+    # right-align against the leaf's rank (period-scan stacking dim etc.)
+    pad = len(shape) - len(base)
+    assert pad >= 0, (path, shape, base)
+    return P(*((None,) * pad + tuple(base)))
+
+
+def param_shardings(params_tree, cfg: ModelConfig, mesh: Mesh,
+                    fsdp: bool = False):
+    """Pytree of NamedShardings matching ``params_tree`` (shapes or
+    arrays)."""
+
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, cfg, mesh, fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def param_shardings_puredp(params_tree, cfg: ModelConfig, mesh: Mesh):
+    """Pure data-parallel + ZeRO-3 layout (§Perf beyond-paper sharding):
+    no tensor parallelism — the batch shards over *both* mesh axes and
+    every parameter is fully sharded (FSDP) across whichever axes its dims
+    divide.  Eliminates per-layer activation all-reduces in exchange for
+    per-layer parameter all-gathers (cheap when params ≪ activations).
+    Greedy: largest dim takes 'data', another divisible dim takes
+    'model'; falls back to single-axis or replication."""
+    dp = _axis_size(mesh, "data")
+    tp = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and shape:
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            # skip the period-scan stacking dim (dim 0 of rank>=3 stacks)
+            used_axes = []
+            for dim in order:
+                if len(spec) >= 3 and dim == 0:
+                    continue
+                if "data" not in used_axes and _div(shape[dim], dp):
+                    spec[dim] = "data"
+                    used_axes.append("data")
+                elif "model" not in used_axes and _div(shape[dim], tp) \
+                        and spec[dim] is None:
+                    spec[dim] = "model"
+                    used_axes.append("model")
+                if len(used_axes) == 2:
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def batch_shardings_puredp(batch_tree, mesh: Mesh):
+    """Batch over (pod, data, model) — every chip takes samples."""
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        bdim = 1 if (name.endswith("positions") and len(shape) == 3) else 0
+        spec = [None] * len(shape)
+        if _div(shape[bdim], n):
+            spec[bdim] = axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+# -------------------------------------------------------------- activations
+def data_batch_spec(mesh: Mesh, batch: int, rank: int,
+                    batch_dim: int = 0) -> P:
+    """Batch-sharded activation spec; falls back to replication when the
+    batch doesn't divide the data axes (long-context batch=1)."""
+    axes = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    spec = [None] * rank
+    if _div(batch, n):
+        spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*spec)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Input-batch shardings: leading dim over (pod, data); M-RoPE
+    positions (3, B, S) shard dim 1."""
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if name.endswith("positions") and len(shape) == 3:
+            return NamedSharding(mesh,
+                                 data_batch_spec(mesh, shape[1], 3, 1))
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh,
+                             data_batch_spec(mesh, shape[0], len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+# -------------------------------------------------------------- KV caches
+def cache_shardings(cache_tree, cfg: ModelConfig, mesh: Mesh,
+                    long_context: bool = False):
+    """Decode-cache shardings.
+
+    Normal decode: batch over (pod, data), kv-heads over model when
+    divisible.  Long-context (batch=1): the cache *sequence* dim shards
+    over ``data`` (sequence parallelism) for full-attention layers."""
+    tp = _axis_size(mesh, "model")
+    dp = _axis_size(mesh, "data")
+    kv_ok = _div(cfg.n_kv_heads, tp)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        leafname = name.split("/")[-1]
+        if leafname in ("k", "v", "xk", "xv"):
+            b, c = shape[-4], shape[-3]
+            spec = [None] * len(shape)
+            bspec = data_batch_spec(mesh, b, 1, 0)[0]
+            spec[-4] = bspec
+            if long_context and bspec is None and _div(c, dp):
+                spec[-3] = "data"
+            if kv_ok:
+                spec[-2] = "model"
+            elif _div(c, tp) and spec[-3] is None:
+                # kv heads don't divide the model axis: shard the cache
+                # *sequence* dim instead (attention contracts over it, so
+                # XLA reduces partial scores with a psum) — without this,
+                # 32k-cache decode at batch 128 exceeds HBM for kv<16
+                # archs (see EXPERIMENTS §Dry-run).
+                spec[-3] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if leafname in ("conv", "h", "ssd"):
+            offsets = {"conv": 3, "h": 2, "ssd": 4}
+            bdim = len(shape) - offsets[leafname]
+            spec = [None] * len(shape)
+            spec[bdim] = data_batch_spec(mesh, shape[bdim], 1, 0)[0]
+            if leafname == "h" and _div(shape[-1], tp):
+                spec[-1] = "model"               # recurrent width
+            if leafname == "ssd" and _div(shape[-3], tp):
+                spec[-3] = "model"               # SSD heads
+            return NamedSharding(mesh, P(*spec))
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

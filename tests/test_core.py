@@ -1,0 +1,180 @@
+"""Unit tests for the sPIN core: matching, allocator, HER/MPQ, DDT engine,
+SLMP framing."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import alloc as palloc
+from repro.core import ddt as ddtlib
+from repro.core import her as herlib
+from repro.core import matching as m
+from repro.core import packet as pkt
+
+
+# ------------------------------------------------------------- packets
+def test_header_offsets_match_fig6():
+    f = pkt.make_icmp_echo(np.arange(16, dtype=np.uint8))
+    assert f[pkt.ETH_TYPE] == 0x08 and f[pkt.ETH_TYPE + 1] == 0x00
+    assert f[pkt.IP_PROTO] == pkt.IPPROTO_ICMP
+    assert f[pkt.ICMP_TYPE] == 8            # byte 34 == 8 (paper Fig 6)
+    s = pkt.make_slmp(0xABCD, 0x1234, pkt.SLMP_FLAG_SYN,
+                      np.zeros(4, np.uint8))
+    assert int.from_bytes(bytes(s[pkt.SLMP_MSGID:pkt.SLMP_MSGID + 4]),
+                          "big") == 0xABCD
+    assert int.from_bytes(bytes(s[pkt.SLMP_OFFSET:pkt.SLMP_OFFSET + 4]),
+                          "big") == 0x1234
+
+
+def test_endian_helpers_roundtrip():
+    d = jnp.zeros((64,), jnp.uint8)
+    d = pkt.write_u32(d, 10, 0xDEADBEEF)
+    assert int(pkt.read_u32(d, 10)) == 0xDEADBEEF
+    d = pkt.write_u16(d, 2, 0xBEEF)
+    assert int(pkt.read_u16(d, 2)) == 0xBEEF
+
+
+def test_icmp_echo_rule_matches_listing2():
+    """The paper's Listing-2 rule: word idx 8, mask 0xff00, start=end=0x0800."""
+    r = m.RULE_ICMP_ECHO_REQ()
+    assert r.idx == 8 and r.mask == 0xFF00
+    assert r.start == 0x0800 and r.end == 0x0800
+
+
+# ------------------------------------------------------------ allocator
+def test_alloc_bimodal_classes():
+    st = palloc.make_state()
+    sizes = jnp.asarray([64, 128, 129, 1500], jnp.int32)
+    valid = jnp.ones((4,), bool)
+    st, addr, ok = palloc.alloc(st, sizes, valid)
+    addr = np.asarray(addr)
+    assert bool(ok.all())
+    assert addr[0] < palloc.LARGE_BASE and addr[1] < palloc.LARGE_BASE
+    assert addr[2] >= palloc.LARGE_BASE and addr[3] >= palloc.LARGE_BASE
+    # distinct slots
+    assert len(set(addr.tolist())) == 4
+
+
+def test_alloc_exhaustion_and_free():
+    st = palloc.make_state(n_small=4, n_large=2)
+    sizes = jnp.full((8,), 64, jnp.int32)
+    st, addr, ok = palloc.alloc(st, sizes, jnp.ones((8,), bool))
+    assert int(ok.sum()) == 4                      # FIFO underflow -> drop
+    st = palloc.free(st, addr, ok)
+    st, addr2, ok2 = palloc.alloc(st, sizes, jnp.ones((8,), bool))
+    assert int(ok2.sum()) == 4                     # slots recycled
+
+
+def test_alloc_fifo_order():
+    st = palloc.make_state(n_small=8, n_large=2)
+    st, a1, _ = palloc.alloc(st, jnp.full((2,), 64, jnp.int32),
+                             jnp.ones((2,), bool))
+    st = palloc.free(st, a1, jnp.ones((2,), bool))
+    st, a2, _ = palloc.alloc(st, jnp.full((6,), 64, jnp.int32),
+                             jnp.ones((6,), bool))
+    # pops continue round the FIFO before reusing freed slots
+    assert set(np.asarray(a1).tolist()) & set(np.asarray(a2).tolist()[:4]) \
+        == set()
+
+
+# ------------------------------------------------------------- HER / MPQ
+def test_her_header_tail_scheduling():
+    mpq = herlib.make_mpq(16)
+    n = 6
+    ctx = jnp.zeros((n,), jnp.int32)
+    addr = jnp.arange(n, dtype=jnp.int32) * 128
+    size = jnp.full((n,), 100, jnp.int32)
+    msg = jnp.asarray([1, 1, 1, 2, 2, 2], jnp.uint32)
+    eom = jnp.asarray([False, False, True, False, False, True])
+    valid = jnp.ones((n,), bool)
+    mpq, her = herlib.generate(mpq, ctx, addr, size, msg, eom, valid)
+    rh = np.asarray(her.run_header)
+    rt = np.asarray(her.run_tail)
+    assert rh.tolist() == [True, False, False, True, False, False]
+    assert rt.tolist() == [False, False, True, False, False, True]
+    # both messages completed -> MPQ empty again
+    assert not bool(np.asarray(mpq.active).any())
+
+
+def test_her_message_spanning_batches():
+    mpq = herlib.make_mpq(16)
+    one = lambda eom: (jnp.zeros((1,), jnp.int32),
+                       jnp.zeros((1,), jnp.int32),
+                       jnp.full((1,), 52, jnp.int32),
+                       jnp.full((1,), 9, jnp.uint32),
+                       jnp.asarray([eom]), jnp.ones((1,), bool))
+    mpq, h1 = herlib.generate(mpq, *one(False))
+    assert bool(h1.run_header[0])
+    mpq, h2 = herlib.generate(mpq, *one(False))
+    assert not bool(h2.run_header[0])       # already active: no header
+    mpq, h3 = herlib.generate(mpq, *one(True))
+    assert bool(h3.run_tail[0]) and not bool(h3.run_header[0])
+    assert not bool(np.asarray(mpq.active).any())
+
+
+# ---------------------------------------------------------------- DDT
+def test_ddt_simple_segments():
+    d = ddtlib.simple_ddt()       # vector: 8 blocks of 2 floats, stride 4
+    segs = ddtlib.segments(d)
+    assert len(segs) == 8
+    assert segs[0] == (0, 8)       # 2 floats
+    assert segs[1] == (16, 8)      # stride 4 floats = 16 bytes
+
+
+def test_ddt_contiguous_merging():
+    d = ddtlib.Contiguous(4, ddtlib.MPI_FLOAT)
+    segs = ddtlib.segments(d)
+    assert segs == [(0, 16)]       # dataloop contig-merge
+
+
+def test_ddt_pack_unpack_numpy_roundtrip_simple():
+    c = ddtlib.commit(ddtlib.simple_ddt(), count=2)
+    rng = np.random.default_rng(0)
+    mem = rng.integers(0, 256, c.mem_bytes).astype(np.uint8)
+    msg = ddtlib.pack_np(c, mem)
+    assert len(msg) == c.msg_bytes
+    out = ddtlib.unpack_np(c, msg, np.zeros(c.mem_bytes, np.uint8))
+    # all mapped bytes equal the source
+    mask = c.mem_to_msg >= 0
+    np.testing.assert_array_equal(out[mask], mem[mask])
+
+
+def test_ddt_complex_has_overlap():
+    d = ddtlib.complex_ddt()
+    c = ddtlib.commit(d, count=1)
+    # overlap: serialized size exceeds distinct memory bytes touched
+    touched = (c.mem_to_msg >= 0).sum()
+    assert c.msg_bytes > touched
+
+
+def test_ddt_complex_unpack_last_wins():
+    c = ddtlib.commit(ddtlib.complex_ddt(), count=1)
+    msg = np.arange(c.msg_bytes, dtype=np.uint8)
+    out = ddtlib.unpack_np(c, msg, np.zeros(c.mem_bytes, np.uint8))
+    # for every memory byte, value must equal the LAST msg byte mapping it
+    for b in range(c.mem_bytes):
+        k = c.mem_to_msg[b]
+        if k >= 0:
+            assert out[b] == msg[k]
+
+
+def test_element_maps_match_byte_maps():
+    c = ddtlib.commit(ddtlib.simple_ddt(), count=4)
+    pack_idx, unpack_idx = ddtlib.element_maps(c, 4)
+    mem = np.random.default_rng(1).normal(
+        size=c.mem_bytes // 4).astype(np.float32)
+    msg_e = mem[pack_idx]
+    msg_b = ddtlib.pack_np(c, mem.view(np.uint8))
+    np.testing.assert_array_equal(msg_e.view(np.uint8), msg_b)
+
+
+# ---------------------------------------------------------------- SLMP
+def test_slmp_segmentation_flags():
+    from repro.core import slmp
+    cfg = slmp.SlmpSenderConfig(window=4, mtu_payload=100)
+    frames = slmp.segment_message(np.zeros(950, np.uint8), 5, cfg)
+    assert len(frames) == 10
+    last = frames[-1]
+    flags = int(pkt.read_u16(jnp.asarray(last), pkt.SLMP_FLAGS))
+    assert flags & pkt.SLMP_FLAG_EOM
+    first_flags = int(pkt.read_u16(jnp.asarray(frames[0]), pkt.SLMP_FLAGS))
+    assert first_flags & pkt.SLMP_FLAG_SYN

@@ -1,0 +1,193 @@
+"""Per-architecture smoke tests (reduced same-family configs): one
+forward/train step on CPU asserting shapes + no NaNs, plus decode-path
+consistency and family-specific behaviours."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs import shapes as sh
+from repro.models import ssm as ssmlib
+from repro.models.model import build_model
+from repro.train import optimizer as opt
+
+ARCHS = configs.ARCHS
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = configs.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = sh.train_batch_specs(cfg, seq=32, batch=2, concrete=True,
+                                 rng=rng)
+    logits, aux = jax.jit(m.forward)(params, {k: v for k, v in batch.items()
+                                              if k != "targets"})
+    if cfg.family == "vlm":
+        total = batch["img_embeds"].shape[1] + batch["tokens"].shape[1]
+    else:
+        total = 32
+    assert logits.shape == (2, total, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    # one full train step (loss + grads + adamw)
+    ost = opt.init(params)
+    ocfg = opt.OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+
+    def step(p, o, b):
+        (loss, metr), g = jax.value_and_grad(m.loss_fn, has_aux=True)(p, b)
+        p2, o2, om = opt.apply_updates(p, o, g, ocfg)
+        return p2, o2, loss
+
+    p2, o2, loss = jax.jit(step)(params, ost, batch)
+    assert np.isfinite(float(loss))
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch, rng):
+    cfg = configs.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(1))
+    s, b = 24, 2
+    batch = sh.train_batch_specs(cfg, seq=s, batch=b, concrete=True,
+                                 rng=rng)
+    fwd = dict(batch)
+    fwd.pop("targets", None)
+    logits_full, _ = jax.jit(m.forward)(params, fwd)
+    if cfg.family == "vlm":
+        text = batch["tokens"].shape[1]
+        pre = dict(fwd)
+        pre["tokens"] = batch["tokens"][:, : text - 1]
+        pre["positions"] = batch["positions"][:, :, : s - 1]
+        tok_next = batch["tokens"][:, text - 1: text]
+    else:
+        pre = {k: (v[:, : s - 1] if k == "tokens" else v)
+               for k, v in fwd.items()}
+        tok_next = batch["tokens"][:, s - 1: s]
+    _, cache = jax.jit(lambda p, bb: m.prefill(p, bb, max_len=s + 4))(
+        params, pre)
+    logits_dec, cache2 = jax.jit(
+        lambda p, t, c: m.decode_step(p, t, c,
+                                      jnp.asarray(s - 1, jnp.int32)))(
+        params, tok_next, cache)
+    ref = logits_full[:, -1]
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    err = float(jnp.max(jnp.abs(logits_dec - ref))) / scale
+    assert err < 0.05, f"{arch}: decode/forward relative error {err}"
+
+
+def test_gemma3_local_global_pattern():
+    cfg = configs.get_smoke_config("gemma3-1b")
+    m = build_model(cfg)
+    kinds = cfg.pattern_layers
+    assert kinds.count("attn") * 2 < len(kinds)       # mostly local
+    assert m.tail_kinds() == ("local", "local")
+
+
+def test_kimi_first_layer_dense():
+    cfg = configs.get_smoke_config("kimi-k2-1t-a32b")
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    assert len(params["head_blocks"]) == 1
+    assert "mlp" in params["head_blocks"][0]          # dense, not moe
+    assert "moe" in jax.tree.leaves(
+        params["scan_blocks"][0], is_leaf=lambda x: isinstance(x, dict)
+    )[0] or "moe" in params["scan_blocks"][0]
+
+
+def test_mamba2_ssd_matches_sequential_recurrence():
+    """Chunked SSD == naive sequential state recurrence."""
+    b, s, h, p, n = 2, 24, 3, 4, 8
+    rng = np.random.default_rng(0)
+    xh = jnp.asarray(rng.normal(size=(b, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, h))).astype(np.float32)
+                     * 0.1)
+    a = -jnp.asarray(np.linspace(0.5, 2.0, h).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    y, final = ssmlib.ssd_chunked(xh, dt, a, bm, cm, chunk=8)
+
+    # naive recurrence
+    st = np.zeros((b, h, n, p), np.float32)
+    ys = np.zeros((b, s, h, p), np.float32)
+    for t in range(s):
+        dec = np.exp(np.asarray(dt[:, t]) * np.asarray(a))       # (b,h)
+        upd = np.einsum("bn,bh,bhp->bhnp", np.asarray(bm[:, t]),
+                        np.asarray(dt[:, t]), np.asarray(xh[:, t]))
+        st = st * dec[..., None, None] + upd
+        ys[:, t] = np.einsum("bn,bhnp->bhp", np.asarray(cm[:, t]), st)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), st, rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_matches_sequential():
+    from repro.models import rglru as rg
+    cfg = configs.get_smoke_config("recurrentgemma-9b")
+    p = rg.rglru_init(jax.random.key(0), cfg)
+    b, s = 2, 16
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(b, s, cfg.d_model)).astype(np.float32), jnp.bfloat16)
+    y, state = rg.rglru_apply_train(p, cfg, x, return_state=True)
+    # sequential decode over the same tokens
+    cache = rg.rglru_decode_init(cfg, b, jnp.bfloat16)
+    ys = []
+    for t in range(s):
+        yt, cache = rg.rglru_apply_decode(p, cfg, x[:, t:t + 1], cache)
+        ys.append(yt)
+    yseq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yseq, np.float32),
+                               rtol=0.1, atol=0.05)
+    np.testing.assert_allclose(np.asarray(state["h"]),
+                               np.asarray(cache["h"]), rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_sliding_window_attention_masks_far_context():
+    """A local-attn token must be unaffected by tokens beyond the window."""
+    from repro.models import attention as A
+    cfg = configs.get_smoke_config("gemma3-1b")       # window 16
+    p = A.attn_init(jax.random.key(0), cfg)
+    b, s = 1, 64
+    rng = np.random.default_rng(0)
+    x1 = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.bfloat16)
+    x2 = jnp.asarray(np.concatenate(
+        [rng.normal(size=(b, 8, cfg.d_model)),        # differs early
+         np.asarray(x1[:, 8:], np.float32)], axis=1), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y1 = A.attend_train(p, cfg, x1, pos, kind="local")
+    y2 = A.attend_train(p, cfg, x2, pos, kind="local")
+    # last token: window 16 -> positions < 48 irrelevant... both inputs
+    # agree from position 8 on, so outputs at the end must match
+    np.testing.assert_allclose(np.asarray(y1[:, -1], np.float32),
+                               np.asarray(y2[:, -1], np.float32),
+                               atol=1e-2)
+
+
+def test_param_counts_full_configs():
+    """Full configs land near their nameplate sizes."""
+    expectations = {
+        "qwen3-1.7b": (1.4e9, 2.4e9),
+        "qwen2-7b": (6.5e9, 8.5e9),
+        "nemotron-4-15b": (14e9, 17e9),
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "recurrentgemma-9b": (8e9, 11e9),
+        "gemma3-1b": (0.9e9, 1.6e9),
+        "qwen2-vl-2b": (1.5e9, 2.6e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),       # total (not active) params
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "whisper-tiny": (2e7, 8e7),
+    }
+    for arch, (lo, hi) in expectations.items():
+        n = configs.get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"

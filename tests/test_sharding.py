@@ -1,0 +1,64 @@
+"""Sharding-rule validation: for every architecture, the parameter /
+cache / batch shardings must be consistent (divisibility) with the
+production mesh axis sizes.  Runs in a subprocess with 64 fake host
+devices and an (4, 16) mesh — same model-axis width as production, so
+every divisibility decision the rules make is exercised — and lowers an
+identity function with the shardings attached (cheap: no model compile).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.models.model import build_model
+from repro.parallel import sharding as shlib
+
+mesh = jax.make_mesh((4, 16), ("data", "model"),
+                     devices=jax.devices()[:64])
+out = {}
+for arch in configs.ARCHS:
+    cfg = configs.get_config(arch)
+    model = build_model(cfg)
+    params = model.init_eval()
+    for fsdp in (False, True):
+        sh = shlib.param_shardings(params, cfg, mesh, fsdp=fsdp)
+        jax.jit(lambda p: p, in_shardings=(sh,),
+                out_shardings=sh).lower(params)     # divisibility check
+    # decode cache shardings for the 32k cell shape (batch 128)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    csh = shlib.cache_shardings(cache, cfg, mesh)
+    jax.jit(lambda c: c, in_shardings=(csh,),
+            out_shardings=csh).lower(cache)
+    # batch shardings
+    _, batch = shp.input_specs(cfg, "train_4k")
+    bsh = shlib.batch_shardings(batch, mesh)
+    jax.jit(lambda b: b, in_shardings=(bsh,),
+            out_shardings=bsh).lower(batch)
+    out[arch] = "ok"
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharding_rules_all_archs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    r = subprocess.run([sys.executable, "-c", CODE], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(v == "ok" for v in out.values()), out
+    assert len(out) == 10
