@@ -1,0 +1,118 @@
+"""Fabric sweep: SLMP goodput vs (loss rate × window size), plus ping-pong
+latency vs loss — the paper's Fig 8 shape, but over an actual lossy,
+reordering wire with the retransmission path live.
+
+Each point runs a real two-node fabric: the host-side SLMP state machine
+windows and retransmits, the receiver runs the sPIN handler pipeline.
+Time is counted in fabric ticks; a tick is mapped to wall time via
+``TICK_NS`` calibrated so the fabric RTT (2 ticks each way at latency=2)
+matches the 30 us loopback RTT used by bench_slmp — goodput numbers are
+therefore in the same modeled 100G setting, not this host's speed.
+
+Writes every point to ``BENCH_fabric.json`` (machine-readable perf
+trajectory) in addition to the CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import apps, packet as pkt, slmp
+from repro.net import Fabric, LinkConfig, Node, PingPongClient, \
+    SlmpSenderEngine
+
+LOSSES = [0.0, 0.05, 0.1, 0.2]
+WINDOWS = [4, 16, 64]
+MSG_BYTES = 1 << 16                     # 64 KiB per transfer
+MTU_PAYLOAD = 1024
+BATCH = 32
+TICK_NS = 7_500.0                       # 4-tick RTT == 30 us (bench_slmp)
+JSON_PATH = "BENCH_fabric.json"
+
+
+def _goodput_sweep(tx: Node, rx: Node, msg: np.ndarray) -> List[dict]:
+    records = []
+    for loss in LOSSES:
+        for window in WINDOWS:
+            cfg = slmp.SlmpSenderConfig(
+                window=window, mtu_payload=MTU_PAYLOAD, timeout=12,
+                max_retries=64, src_mac=pkt.node_mac(0),
+                dst_mac=pkt.node_mac(1))
+            sender = SlmpSenderEngine(msg, msg_id=1, cfg=cfg)
+            tx.reset(engines=[sender])
+            rx.reset()
+            fab = Fabric([tx, rx],
+                         link_cfg=LinkConfig(loss=loss, latency=2,
+                                             jitter=2), seed=11)
+            ticks = fab.run(max_ticks=50_000)
+            delivered = sender.done and bool(
+                (rx.read_host(0, len(msg)) == msg).all())
+            t_ns = ticks * TICK_NS
+            gbps = len(msg) * 8 / t_ns if delivered else 0.0
+            s = sender.sender
+            rec = dict(kind="slmp_goodput", loss=loss, window=window,
+                       ticks=ticks, delivered=delivered,
+                       segments=s.nseg, sent_frames=s.sent_frames,
+                       retransmits=s.retransmits,
+                       goodput_gbps=round(gbps, 3),
+                       wire=fab.link_stats()[1])
+            records.append(rec)
+            row(f"fabric_slmp_loss{int(loss * 100)}_w{window}",
+                t_ns / 1e3,
+                f"gbps={gbps:.2f};retx={s.retransmits};"
+                f"delivered={delivered}")
+    return records
+
+
+def _latency_sweep(server_ctx) -> List[dict]:
+    records = []
+    server = Node("server", pkt.node_mac(1), [server_ctx], batch=8)
+    client_node = Node("client", pkt.node_mac(0),
+                       [apps.make_null_context()], batch=8)
+    for loss in LOSSES:
+        client = PingPongClient(count=8, proto="udp",
+                                src_mac=pkt.node_mac(0),
+                                dst_mac=pkt.node_mac(1), timeout=16)
+        client_node.reset(engines=[client])
+        server.reset()
+        fab = Fabric([client_node, server],
+                     link_cfg=LinkConfig(loss=loss, latency=1), seed=4)
+        fab.run(max_ticks=5_000)
+        rtts = client.rtts
+        mean_ticks = float(np.mean(rtts)) if rtts else float("nan")
+        rec = dict(kind="pingpong_latency", loss=loss,
+                   completed=len(rtts), timeouts=client.timeouts,
+                   mean_rtt_ticks=mean_ticks,
+                   mean_rtt_us=round(mean_ticks * TICK_NS / 1e3, 2))
+        records.append(rec)
+        row(f"fabric_pingpong_loss{int(loss * 100)}",
+            mean_ticks * TICK_NS / 1e3,
+            f"rtt_ticks={mean_ticks:.1f};timeouts={client.timeouts}")
+    return records
+
+
+def run(json_path: Optional[str] = JSON_PATH) -> List[dict]:
+    rng = np.random.default_rng(0)
+    msg = rng.integers(0, 256, MSG_BYTES).astype(np.uint8)
+    tx = Node("tx", pkt.node_mac(0), [apps.make_null_context()],
+              batch=BATCH)
+    rx = Node("rx", pkt.node_mac(1), [slmp.make_slmp_context()],
+              batch=BATCH, host_bytes=1 << 17)
+    records = _goodput_sweep(tx, rx, msg)
+    records += _latency_sweep(apps.make_udp_pingpong_context())
+    if json_path:
+        payload = dict(bench="fabric", tick_ns=TICK_NS,
+                       msg_bytes=MSG_BYTES, records=records)
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        row("fabric_json", 0.0, f"wrote={os.path.abspath(json_path)};"
+            f"points={len(records)}")
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -1,12 +1,18 @@
 """Paper Fig 7: ICMP/UDP ping-pong RTT in Host / FPsPIN / Host+FPsPIN
 modes across payload sizes.
 
-Two columns per point:
+Two measurement columns per point:
   * measured — wall-clock through this implementation (vectorized NIC on
     this host; per-packet cost = batch cost / batch size);
   * model_ns — the paper-faithful analytic FPGA model (core/hwmodel.py,
     built from Table II constants + Fig 7 calibration), i.e. what the
     40 MHz FPsPIN prototype would measure.
+Each point also emits a ``pingpong_fabric_*`` row: an end-to-end
+functional check through the two-node net fabric (client engine on node
+0, responder handlers on node 1's sNIC).  The fabric is tick-granular,
+so at loss=0 the RTT is the constant 2-tick wire time regardless of
+payload — the row asserts all pongs complete, it is not a latency
+measurement (bench_fabric sweeps fabric latency vs loss).
 
 The qualitative claims being reproduced: UDP offload beats the host stack;
 ICMP RTT grows linearly with payload (checksum-dominated); Host mode ICMP
@@ -19,9 +25,11 @@ import jax
 
 from benchmarks.common import row, time_fn
 from repro.core import apps, checksum, hwmodel, packet as pkt, spin_nic
+from repro.net import Fabric, LinkConfig, Node, PingPongClient
 
 PAYLOADS = [56, 256, 512, 1024]
 BATCH = 64
+FABRIC_PINGS = 8
 
 
 def _np_host_respond_icmp(frames):
@@ -47,6 +55,14 @@ def _np_host_respond_icmp(frames):
 
 def run() -> None:
     rng = np.random.default_rng(0)
+    client_node = Node("client", pkt.node_mac(0),
+                       [apps.make_null_context()], batch=8)
+    servers = {
+        "icmp": Node("icmp_srv", pkt.node_mac(1),
+                     [apps.make_icmp_context()], batch=8),
+        "udp": Node("udp_srv", pkt.node_mac(1),
+                    [apps.make_udp_pingpong_context()], batch=8),
+    }
     for proto in ("icmp", "udp"):
         for payload in PAYLOADS:
             data = rng.integers(0, 256, payload).astype(np.uint8)
@@ -79,6 +95,23 @@ def run() -> None:
             model = hwmodel.pingpong_rtt_ns("fpspin", proto, payload)
             row(f"pingpong_fpspin_{proto}_{payload}B", t * 1e6,
                 f"model_ns={model.total_ns:.0f}")
+
+            # ---- FPsPIN mode, end-to-end over the two-node fabric
+            client = PingPongClient(count=FABRIC_PINGS, payload=payload,
+                                    proto=proto,
+                                    src_mac=pkt.node_mac(0),
+                                    dst_mac=pkt.node_mac(1))
+            client_node.reset(engines=[client])
+            servers[proto].reset()
+            fab = Fabric([client_node, servers[proto]],
+                         link_cfg=LinkConfig(loss=0.0, latency=1), seed=0)
+            fab.run(max_ticks=1_000)
+            rtt = float(np.mean(client.rtts)) if client.rtts else -1.0
+            row(f"pingpong_fabric_{proto}_{payload}B", 0.0,
+                f"fabric_rtt_ticks={rtt:.1f};"
+                f"pongs={len(client.rtts)}/{FABRIC_PINGS}")
+            assert len(client.rtts) == FABRIC_PINGS, \
+                f"fabric pingpong incomplete: {len(client.rtts)}"
 
             # ---- Host+FPsPIN: NIC matches + DMAs to host; host checksums
             nic2 = spin_nic.SpinNIC([apps.make_icmp_host_context()],

@@ -2,6 +2,9 @@
 
   bench_pingpong : Fig 7  (RTT, 3 modes × ICMP/UDP × payload)
   bench_slmp     : Fig 8  (throughput vs window size, failures)
+  bench_fabric   : Fig 8 over the net fabric (loss × window goodput sweep,
+                   ping-pong latency vs loss) — also writes the
+                   machine-readable ``BENCH_fabric.json``
   bench_ddt      : Fig 10 (DDT throughput + overlap ratio)
   bench_latency  : Table II (module latencies)
   bench_kernels  : Pallas kernel micro-benchmarks
@@ -15,11 +18,12 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_ddt, bench_kernels, bench_latency,
-                            bench_pingpong, bench_slmp)
+    from benchmarks import (bench_ddt, bench_fabric, bench_kernels,
+                            bench_latency, bench_pingpong, bench_slmp)
     suites = [
         ("fig7_pingpong", bench_pingpong.run),
         ("fig8_slmp", bench_slmp.run),
+        ("fabric", bench_fabric.run),
         ("fig10_ddt", bench_ddt.run),
         ("table2_latency", bench_latency.run),
         ("kernels", bench_kernels.run),

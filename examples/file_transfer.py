@@ -1,12 +1,14 @@
-"""Reliable file transfer over SLMP (paper §V-B / Fig 8).
+"""Reliable file transfer over SLMP across the two-node fabric (paper
+§V-B / Fig 8 — now over an actual lossy wire).
 
-    PYTHONPATH=src python examples/file_transfer.py [size_kb] [window]
+    PYTHONPATH=src python examples/file_transfer.py [size_kb] [window] [loss]
 
-Sender segments the file into SLMP packets (SYN on every segment in
-window mode); the receiver side runs *entirely in sPIN handlers* on the
-sNIC: header handler opens the message context, packet handlers DMA
-payloads to host memory at their offsets and ACK, the tail handler pushes
-the completion notification into the host FIFO.
+The sender node runs the host-side SLMP state machine (window, timeout,
+retransmit); the wire drops/reorders packets per ``loss``; the receiver
+side runs *entirely in sPIN handlers* on the peer's sNIC: header handler
+opens the message context, packet handlers DMA payloads to host memory at
+their offsets and ACK, the tail handler pushes the completion
+notification into the host FIFO.
 """
 import sys
 sys.path.insert(0, "src")
@@ -15,43 +17,49 @@ import time
 
 import numpy as np
 
-from repro.core import packet as pkt, slmp, spin_nic
+from repro.core import apps, packet as pkt, slmp
+from repro.net import Fabric, LinkConfig, Node, SlmpSenderEngine
 
 
 def main():
     size_kb = int(sys.argv[1]) if len(sys.argv) > 1 else 256
     window = int(sys.argv[2]) if len(sys.argv) > 2 else 16
+    loss = float(sys.argv[3]) if len(sys.argv) > 3 else 0.05
     nbytes = size_kb << 10
-
-    nic = spin_nic.SpinNIC([slmp.make_slmp_context()],
-                           host_bytes=max(nbytes, 1 << 16), batch=window)
-    state = nic.init_state()
 
     rng = np.random.default_rng(1)
     blob = rng.integers(0, 256, nbytes).astype(np.uint8)
-    cfg = slmp.SlmpSenderConfig(window=window)
-    frames = slmp.segment_message(blob, msg_id=1001, cfg=cfg)
-    print(f"file: {size_kb} KiB -> {len(frames)} SLMP segments, "
-          f"window {window}")
+    cfg = slmp.SlmpSenderConfig(window=window, timeout=12,
+                                src_mac=pkt.node_mac(0),
+                                dst_mac=pkt.node_mac(1))
+    sender = SlmpSenderEngine(blob, msg_id=1001, cfg=cfg)
+    tx = Node("tx", pkt.node_mac(0), [apps.make_null_context()],
+              engines=[sender], batch=max(16, window))
+    rx = Node("rx", pkt.node_mac(1), [slmp.make_slmp_context()],
+              host_bytes=max(nbytes, 1 << 16), batch=max(16, window))
+    fab = Fabric([tx, rx], link_cfg=LinkConfig(loss=loss, latency=2,
+                                               jitter=2), seed=2)
+    print(f"file: {size_kb} KiB -> {sender.sender.nseg} SLMP segments, "
+          f"window {window}, loss {loss:.0%}")
 
-    # warm the jit (compile excluded from goodput)
-    state, _, _ = nic.step(state, pkt.stack_frames([], n=window))
-
+    # first tick compiles both NIC datapaths + the link model; time the rest
+    fab.tick()
     t0 = time.perf_counter()
-    acked = 0
-    for i in range(0, len(frames), window):       # one window per step
-        state, egress, _ = nic.step(
-            state, pkt.stack_frames(frames[i:i + window], n=window))
-        acked += len(slmp.parse_acks(egress))
+    ticks = 1 + fab.run(max_ticks=200_000)
     dt = time.perf_counter() - t0
 
-    got = nic.read_host(state, 0, nbytes)
+    got = rx.read_host(0, nbytes)
     ok = bool((got == blob).all())
-    completions = nic.pop_counters(state, slmp.COMPLETION_QUEUE)
-    print(f"delivered={ok} acks={acked}/{len(frames)} "
-          f"completions={completions.tolist()} "
+    s = sender.sender
+    lost = sum(l["lost"] for l in fab.link_stats())
+    print(f"delivered={ok} ticks={ticks} "
+          f"sent={s.sent_frames} retransmits={s.retransmits} "
+          f"completions={rx.completions} "
+          f"link={fab.link_stats()[1]} "
           f"host-goodput={nbytes / dt / 1e6:.1f} MB/s (this CPU)")
-    assert ok and completions.tolist() == [1001]
+    assert ok and 1001 in rx.completions and s.done
+    if lost > 0:
+        assert s.retransmits > 0, "drops occurred but no retransmission"
     print("file_transfer OK")
 
 

@@ -21,6 +21,13 @@ from repro.core import packet as pkt
 from repro.core import slmp
 
 
+# ---------------------------------------------------------- host-only node
+def make_null_context() -> H.ExecutionContext:
+    """Matches nothing — the whole ingress stream takes the host datapath.
+    Installed on fabric nodes that only run host-side engines."""
+    return H.ExecutionContext(name="null", ruleset=matching.ruleset_none())
+
+
 # ------------------------------------------------------------- ICMP echo
 def icmp_echo_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
     """Listing 1: swap MAC/IP, type=EchoReply, recompute full checksum."""

@@ -97,6 +97,14 @@ class Ruleset:
         return np.stack(rows).astype(np.uint32)
 
 
+def ruleset_none() -> Ruleset:
+    """Matches nothing: every frame forwards to the Corundum/host datapath.
+    Used by fabric nodes whose traffic is all host-side (e.g. senders)."""
+    return Ruleset(mode=MODE_AND,
+                   rules=[RULE_FALSE(), RULE_FALSE(), RULE_FALSE()],
+                   eom=RULE_FALSE())
+
+
 def ruleset_icmp_echo() -> Ruleset:
     """The paper's Listing-2 example: match ICMP Echo-Requests, no EOM."""
     return Ruleset(mode=MODE_AND,

@@ -180,10 +180,21 @@ def internet_checksum_np(data: np.ndarray) -> int:
     return (~s) & 0xFFFF
 
 
+def node_mac(node_id: int) -> bytes:
+    """Locally-administered MAC for simulated node ``node_id`` (net fabric)."""
+    return bytes([0x02, 0, 0, 0, (node_id >> 8) & 0xFF, node_id & 0xFF])
+
+
 def build_eth_ip(buf: np.ndarray, proto: int, payload_len: int,
-                 src_ip: int = 0x0A000001, dst_ip: int = 0x0A000002) -> None:
-    buf[ETH_DST:ETH_DST + 6] = np.arange(6, dtype=np.uint8) + 0x10
-    buf[ETH_SRC:ETH_SRC + 6] = np.arange(6, dtype=np.uint8) + 0x20
+                 src_ip: int = 0x0A000001, dst_ip: int = 0x0A000002,
+                 src_mac: Optional[bytes] = None,
+                 dst_mac: Optional[bytes] = None) -> None:
+    buf[ETH_DST:ETH_DST + 6] = np.frombuffer(
+        dst_mac, np.uint8) if dst_mac is not None else \
+        np.arange(6, dtype=np.uint8) + 0x10
+    buf[ETH_SRC:ETH_SRC + 6] = np.frombuffer(
+        src_mac, np.uint8) if src_mac is not None else \
+        np.arange(6, dtype=np.uint8) + 0x20
     _np_u16(buf, ETH_TYPE, ETH_P_IP)
     buf[IP_VER_IHL] = 0x45
     _np_u16(buf, IP_TOTLEN, 20 + payload_len)
@@ -196,11 +207,14 @@ def build_eth_ip(buf: np.ndarray, proto: int, payload_len: int,
     _np_u16(buf, IP_CSUM, internet_checksum_np(buf[IP_BASE:IP_BASE + 20]))
 
 
-def make_icmp_echo(payload: np.ndarray, seq: int = 0) -> np.ndarray:
+def make_icmp_echo(payload: np.ndarray, seq: int = 0,
+                   src_mac: Optional[bytes] = None,
+                   dst_mac: Optional[bytes] = None) -> np.ndarray:
     """Wire-correct ICMP Echo-Request frame (numpy uint8, len 42+payload)."""
     n = ICMP_CSUM + 6 + len(payload)
     buf = np.zeros(n, np.uint8)
-    build_eth_ip(buf, IPPROTO_ICMP, 8 + len(payload))
+    build_eth_ip(buf, IPPROTO_ICMP, 8 + len(payload),
+                 src_mac=src_mac, dst_mac=dst_mac)
     buf[ICMP_TYPE] = ICMP_ECHO_REQUEST
     _np_u16(buf, ICMP_CSUM + 2, 0x1234)      # identifier
     _np_u16(buf, ICMP_CSUM + 4, seq)
@@ -210,11 +224,13 @@ def make_icmp_echo(payload: np.ndarray, seq: int = 0) -> np.ndarray:
     return buf
 
 
-def make_udp(payload: np.ndarray, sport: int = 9999, dport: int = 9999
-             ) -> np.ndarray:
+def make_udp(payload: np.ndarray, sport: int = 9999, dport: int = 9999,
+             src_mac: Optional[bytes] = None,
+             dst_mac: Optional[bytes] = None) -> np.ndarray:
     n = SLMP_BASE + len(payload)
     buf = np.zeros(n, np.uint8)
-    build_eth_ip(buf, IPPROTO_UDP, 8 + len(payload))
+    build_eth_ip(buf, IPPROTO_UDP, 8 + len(payload),
+                 src_mac=src_mac, dst_mac=dst_mac)
     _np_u16(buf, UDP_SPORT, sport)
     _np_u16(buf, UDP_DPORT, dport)
     _np_u16(buf, UDP_LEN, 8 + len(payload))
@@ -224,14 +240,16 @@ def make_udp(payload: np.ndarray, sport: int = 9999, dport: int = 9999
 
 
 def make_slmp(msg_id: int, offset: int, flags: int, payload: np.ndarray,
-              dport: int = 9330) -> np.ndarray:
+              dport: int = 9330,
+              src_mac: Optional[bytes] = None,
+              dst_mac: Optional[bytes] = None) -> np.ndarray:
     """SLMP segment: 10-byte header inside the UDP payload (paper §V-B)."""
     body = np.zeros(SLMP_HDR_BYTES + len(payload), np.uint8)
     _np_u16(body, 0, flags)
     _np_u32(body, 2, msg_id)
     _np_u32(body, 6, offset)
     body[SLMP_HDR_BYTES:] = payload
-    return make_udp(body, dport=dport)
+    return make_udp(body, dport=dport, src_mac=src_mac, dst_mac=dst_mac)
 
 
 def stack_frames(frames: list, n: Optional[int] = None) -> PacketBatch:

@@ -80,7 +80,16 @@ def slmp_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
 
 def slmp_tail_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
     out = H.none_out()
-    # completion notification: msg_id to the host FIFO
+    # Completion notification: msg_id to the host FIFO.  Semantics under a
+    # lossy wire are *at-least-once, EOM-triggered*: the tail handler runs
+    # on every arrival of an EOM segment (including retransmits whose ACK
+    # was lost), and may precede hole-filling retransmissions of earlier
+    # segments.  Byte-completeness is the sender's job — SLMP reliability
+    # is ACK-driven (SlmpSender.done); receivers that need a "all bytes
+    # landed" signal use that, as the examples/benchmarks do.  (An exact
+    # in-handler completeness check would need per-segment receive state
+    # that survives duplicate deliveries; the VM's associative-add message
+    # state double-counts duplicates, so we keep the paper's EOM trigger.)
     return H.push_counter(out, COMPLETION_QUEUE,
                           args.msg_id.astype(jnp.int32))
 
@@ -103,6 +112,10 @@ class SlmpSenderConfig:
     mtu_payload: int = pkt.MAX_SLMP_PAYLOAD
     syn_every_packet: bool = True   # window-mode: every segment SYN+ACKed
     port: int = 9330
+    timeout: int = 8            # ticks before an unACKed segment retransmits
+    max_retries: int = 32       # per-segment retransmit budget
+    src_mac: Optional[bytes] = None
+    dst_mac: Optional[bytes] = None
 
 
 def segment_message(msg: np.ndarray, msg_id: int,
@@ -120,8 +133,95 @@ def segment_message(msg: np.ndarray, msg_id: int,
         if s == nseg - 1:
             flags |= pkt.SLMP_FLAG_EOM
         frames.append(pkt.make_slmp(msg_id, off, flags, payload,
-                                    dport=cfg.port))
+                                    dport=cfg.port, src_mac=cfg.src_mac,
+                                    dst_mac=cfg.dst_mac))
     return frames
+
+
+class SlmpSender:
+    """Windowed, reliable SLMP sender as a tick-steppable state machine.
+
+    The paper's sender (§V-B) keeps up to ``window`` segments in flight;
+    each SYN segment is ACKed by the sPIN packet handler on the receiver.
+    A segment whose ACK has not arrived ``timeout`` ticks after its last
+    transmission is retransmitted (up to ``max_retries`` times) — the
+    retransmission path that makes SLMP survive a lossy link.
+
+    Drive it with ``poll(now)`` (frames to put on the wire this tick) and
+    ``on_ack(msg_id, offset)`` for every ACK observed.  Retransmission
+    needs per-segment ACKs, so the state machine forces SYN on every
+    segment (``syn_every_packet``).
+    """
+
+    def __init__(self, msg: np.ndarray, msg_id: int,
+                 cfg: Optional[SlmpSenderConfig] = None):
+        cfg = dataclasses.replace(cfg or SlmpSenderConfig(),
+                                  syn_every_packet=True)
+        self.cfg = cfg
+        self.msg_id = msg_id
+        self.nbytes = len(msg)
+        self.frames = segment_message(msg, msg_id, cfg)
+        self.nseg = len(self.frames)
+        self.acked = np.zeros(self.nseg, bool)
+        self.last_sent = np.full(self.nseg, -1, np.int64)
+        self.retries = np.zeros(self.nseg, np.int32)
+        self.sent_frames = 0
+        self.retransmits = 0
+
+    @property
+    def done(self) -> bool:
+        return bool(self.acked.all())
+
+    @property
+    def failed(self) -> bool:
+        return bool((self.retries > self.cfg.max_retries).any())
+
+    def on_ack(self, msg_id: int, offset: int) -> None:
+        if msg_id != self.msg_id:
+            return
+        seg = offset // self.cfg.mtu_payload
+        if 0 <= seg < self.nseg:
+            self.acked[seg] = True
+
+    def poll(self, now: int) -> List[np.ndarray]:
+        """Frames to transmit at tick ``now`` (new segments fill the window,
+        timed-out segments retransmit)."""
+        if self.done or self.failed:
+            return []
+        sent = self.last_sent >= 0
+        timed_out = sent & ~self.acked & (
+            now - self.last_sent >= self.cfg.timeout)
+        inflight = int((sent & ~self.acked & ~timed_out).sum())
+        budget = max(0, self.cfg.window - inflight)
+        # retransmissions first (oldest data unblocks the receiver), then
+        # new segments in offset order
+        segs = (np.flatnonzero(timed_out).tolist()
+                + np.flatnonzero(~sent).tolist())[:budget]
+        out = []
+        for s in segs:
+            if self.last_sent[s] >= 0:
+                self.retries[s] += 1
+                if self.retries[s] > self.cfg.max_retries:
+                    continue               # budget exhausted: nothing sent
+                self.retransmits += 1
+            self.last_sent[s] = now
+            self.sent_frames += 1
+            out.append(self.frames[s])
+        return out
+
+    # -- checkpoint support (net fabric snapshots) ------------------------
+    def snapshot(self) -> dict:
+        return dict(acked=self.acked.copy(), last_sent=self.last_sent.copy(),
+                    retries=self.retries.copy(),
+                    sent_frames=self.sent_frames,
+                    retransmits=self.retransmits)
+
+    def restore(self, snap: dict) -> None:
+        self.acked = snap["acked"].copy()
+        self.last_sent = snap["last_sent"].copy()
+        self.retries = snap["retries"].copy()
+        self.sent_frames = snap["sent_frames"]
+        self.retransmits = snap["retransmits"]
 
 
 def parse_acks(batch: pkt.PacketBatch) -> List[tuple]:

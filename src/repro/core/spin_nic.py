@@ -242,10 +242,19 @@ class SpinNIC:
         """Host read of the DMA window (the /dev/pspin0 mmap view)."""
         return np.asarray(state.host[base:base + nbytes])
 
-    def pop_counters(self, state: NICState, queue: int) -> np.ndarray:
-        """Drain a counter FIFO (host side, diagnostic)."""
+    def pop_counters(self, state: NICState, queue: int
+                     ) -> Tuple[np.ndarray, NICState]:
+        """Drain a counter FIFO (host side).
+
+        Returns ``(values, state)`` where the returned state has the queue
+        count cleared — a second pop yields nothing until handlers push
+        again (a real FIFO drain, not a peek).
+        """
         cnt = int(state.counter_count[queue])
         vals = np.asarray(state.counters[queue])
         start = max(0, cnt - H.COUNTER_QUEUE_LEN)   # older entries overwritten
-        return np.array([vals[(start + i) % H.COUNTER_QUEUE_LEN]
-                         for i in range(cnt - start)], np.int32)
+        drained = np.array([vals[(start + i) % H.COUNTER_QUEUE_LEN]
+                            for i in range(cnt - start)], np.int32)
+        new_state = dataclasses.replace(
+            state, counter_count=state.counter_count.at[queue].set(0))
+        return drained, new_state

@@ -1,0 +1,18 @@
+"""repro.net — the multi-node network fabric.
+
+Connects several :class:`~repro.core.spin_nic.SpinNIC` instances over
+simulated links with configurable loss, reordering, duplication and
+latency, so every handler application becomes a multi-node experiment
+(the paper's full-system evaluation: real endpoints, a real wire).
+
+  link.py    jittable LinkModel — a pure function of (PRNG key, LinkState)
+  node.py    Node = SpinNIC + host-side protocol engines (SLMP sender,
+             ping-pong client)
+  fabric.py  Fabric = N nodes + N ingress links + MAC routing + tick()
+"""
+from repro.net.fabric import Fabric
+from repro.net.link import Link, LinkConfig, LinkState
+from repro.net.node import Node, PingPongClient, SlmpSenderEngine
+
+__all__ = ["Fabric", "Link", "LinkConfig", "LinkState", "Node",
+           "PingPongClient", "SlmpSenderEngine"]

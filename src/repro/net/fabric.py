@@ -1,0 +1,123 @@
+"""The fabric: N nodes wired together through lossy links, MAC-routed.
+
+Topology model: every node owns one *ingress link* (its wire).  A frame
+leaving any node is routed by destination MAC onto the target node's
+ingress link, where the link model applies loss / duplication / latency /
+reordering; ``latency`` ticks later the frame surfaces in the target's
+ingress batch.  One :meth:`Fabric.tick` advances every node by one NIC
+step plus one link round — discrete-event at batch granularity, the same
+granularity as ``SpinNIC.step``.
+
+The whole system state (per-node ``NICState``, per-link ``LinkState``,
+host-engine counters, the tick clock, the PRNG key) is captured by
+:meth:`checkpoint` and restored by :meth:`restore` — a fabric run is a
+pure function of (initial state, seed), like a single NIC.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packet as pkt
+from repro.net import link as linklib
+from repro.net.node import Node
+
+
+class Fabric:
+    def __init__(self, nodes: Sequence[Node],
+                 link_cfg: linklib.LinkConfig = linklib.LinkConfig(),
+                 link_cfgs: Optional[Sequence[linklib.LinkConfig]] = None,
+                 seed: int = 0):
+        """``link_cfgs`` (one per node, ingress side) overrides the shared
+        ``link_cfg`` when per-node asymmetry is wanted."""
+        self.nodes: List[Node] = list(nodes)
+        cfgs = list(link_cfgs) if link_cfgs is not None else \
+            [link_cfg] * len(self.nodes)
+        assert len(cfgs) == len(self.nodes)
+        self.links = [linklib.Link(c) for c in cfgs]
+        self.link_states = [l.init_state() for l in self.links]
+        self.key = jax.random.PRNGKey(seed)
+        self.now = 0
+        self.unroutable = 0
+        self._by_mac: Dict[bytes, int] = {
+            n.mac: i for i, n in enumerate(self.nodes)}
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> None:
+        now = self.now
+        outbound: List[List[np.ndarray]] = [[] for _ in self.nodes]
+
+        # 1) every node consumes what its link delivers this tick
+        for i, node in enumerate(self.nodes):
+            self.link_states[i], ingress = self.links[i].pop(
+                self.link_states[i], now, node.batch)
+            frames = node.tick(ingress, now)
+            # 2) route by destination MAC
+            for f in frames:
+                dst = bytes(f[pkt.ETH_DST:pkt.ETH_DST + 6])
+                j = self._by_mac.get(dst)
+                if j is None:
+                    self.unroutable += 1
+                    continue
+                outbound[j].append(f)
+
+        # 3) push routed traffic onto the target links (padded to a power
+        #    of two so the jitted link push compiles O(log) shapes, not one
+        #    per distinct frame count)
+        for j, frames in enumerate(outbound):
+            if not frames:
+                continue
+            n = 1 << max(0, (len(frames) - 1).bit_length())
+            self.key, sub = jax.random.split(self.key)
+            self.link_states[j] = self.links[j].push(
+                self.link_states[j], sub, pkt.stack_frames(frames, n=n), now)
+        self.now += 1
+
+    def run(self, max_ticks: int = 10_000, until=None) -> int:
+        """Tick until ``until()`` (default: every node's engines done and
+        all links drained) or ``max_ticks``.  Returns ticks executed."""
+        if until is None:
+            def until():
+                return all(n.done for n in self.nodes) and not any(
+                    bool(np.asarray(s.occupied).any())
+                    for s in self.link_states)
+        t0 = self.now
+        while self.now - t0 < max_ticks and not until():
+            self.tick()
+        return self.now - t0
+
+    def reset(self, seed: int = 0) -> None:
+        """Fresh links/clock/PRNG (node NIC states reset via Node.reset)."""
+        self.link_states = [l.init_state() for l in self.links]
+        self.key = jax.random.PRNGKey(seed)
+        self.now = 0
+        self.unroutable = 0
+
+    # ---------------------------------------------------------- observability
+    def node(self, name: str) -> Node:
+        return next(n for n in self.nodes if n.name == name)
+
+    def link_stats(self) -> List[dict]:
+        return [l.stats(s) for l, s in zip(self.links, self.link_states)]
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self) -> dict:
+        return dict(
+            now=self.now,
+            key=jnp.copy(self.key),
+            unroutable=self.unroutable,
+            links=[jax.tree.map(jnp.copy, s) for s in self.link_states],
+            nodes=[n.snapshot() for n in self.nodes],
+        )
+
+    def restore(self, snap: dict) -> None:
+        self.now = snap["now"]
+        self.key = jnp.copy(snap["key"])
+        self.unroutable = snap["unroutable"]
+        self.link_states = [jax.tree.map(jnp.copy, s)
+                            for s in snap["links"]]
+        for n, s in zip(self.nodes, snap["nodes"]):
+            n.restore(s)

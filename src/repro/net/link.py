@@ -1,0 +1,166 @@
+"""The link model: a lossy, reordering, duplicating wire with latency.
+
+A :class:`Link` owns a fixed-capacity in-flight buffer (``LinkState``, a
+registered pytree — checkpointable exactly like ``NICState``).  Both
+operations are pure jitted functions:
+
+  ``push(state, key, batch, now)``  — admit an egress ``PacketBatch``:
+      each packet is independently dropped with probability ``loss``,
+      duplicated with probability ``duplicate``, and stamped with a
+      delivery tick ``now + latency + U[0, jitter]`` (+ an extra
+      ``reorder_delay`` with probability ``reorder`` — late-stamped
+      packets overtake each other, which is how reordering emerges).
+  ``pop(state, now, n)``            — extract up to ``n`` packets whose
+      delivery tick has passed, as an ingress ``PacketBatch``.
+
+Randomness comes only from the PRNG key: the same key produces the same
+loss pattern, so every fabric experiment is exactly reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packet as pkt
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkConfig:
+    """Static link parameters (latencies in fabric ticks)."""
+    loss: float = 0.0           # per-packet drop probability
+    duplicate: float = 0.0      # per-packet duplication probability
+    latency: int = 1            # base one-way latency, ticks (>= 1)
+    jitter: int = 0             # uniform extra delay in [0, jitter]
+    reorder: float = 0.0        # prob. of an extra reorder_delay penalty
+    reorder_delay: int = 3
+    capacity: int = 512         # in-flight buffer slots (overflow drops)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LinkState:
+    data: jax.Array        # (CAP, MTU) uint8 in-flight frames
+    length: jax.Array      # (CAP,) int32
+    deliver_at: jax.Array  # (CAP,) int32 delivery tick
+    occupied: jax.Array    # (CAP,) bool
+    pushed: jax.Array      # () int32 — packets offered to the link
+    lost: jax.Array        # () int32 — dropped by the loss process
+    overflowed: jax.Array  # () int32 — dropped on buffer overflow
+    duplicated: jax.Array  # () int32
+    delivered: jax.Array   # () int32
+
+    def tree_flatten(self):
+        return (self.data, self.length, self.deliver_at, self.occupied,
+                self.pushed, self.lost, self.overflowed, self.duplicated,
+                self.delivered), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_state(capacity: int) -> LinkState:
+    return LinkState(
+        data=jnp.zeros((capacity, pkt.MTU), jnp.uint8),
+        length=jnp.zeros((capacity,), jnp.int32),
+        deliver_at=jnp.zeros((capacity,), jnp.int32),
+        occupied=jnp.zeros((capacity,), bool),
+        pushed=jnp.zeros((), jnp.int32),
+        lost=jnp.zeros((), jnp.int32),
+        overflowed=jnp.zeros((), jnp.int32),
+        duplicated=jnp.zeros((), jnp.int32),
+        delivered=jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _push(cfg: LinkConfig, state: LinkState, key: jax.Array,
+          batch: pkt.PacketBatch, now) -> LinkState:
+    n = batch.n
+    k_loss, k_dup, k_jit, k_reo = jax.random.split(key, 4)
+
+    survives = batch.valid & (
+        jax.random.uniform(k_loss, (n,)) >= cfg.loss)
+    dup = survives & (jax.random.uniform(k_dup, (n,)) < cfg.duplicate)
+
+    # candidates = originals + duplicates, each with its own delay sample
+    cand_valid = jnp.concatenate([survives, dup])
+    delay = jnp.asarray(cfg.latency, jnp.int32) + (
+        jax.random.randint(k_jit, (2 * n,), 0, cfg.jitter + 1)
+        if cfg.jitter > 0 else 0)
+    if cfg.reorder > 0.0:
+        delay = delay + jnp.where(
+            jax.random.uniform(k_reo, (2 * n,)) < cfg.reorder,
+            cfg.reorder_delay, 0)
+    deliver_at = jnp.asarray(now, jnp.int32) + delay
+
+    # scatter candidates into free slots (FIFO over the slot array)
+    cap = state.occupied.shape[0]
+    cand_rank = jnp.cumsum(cand_valid.astype(jnp.int32)) - 1
+    n_free = (~state.occupied).sum()
+    fits = cand_valid & (cand_rank < n_free)
+    # slot index for the r-th candidate = index of the r-th free slot
+    slot_of_rank = jnp.argsort(state.occupied, stable=True)   # free first
+    slot = jnp.where(fits, slot_of_rank[jnp.minimum(cand_rank, cap - 1)],
+                     cap)                                     # cap -> drop
+    cand_data = jnp.concatenate([batch.data, batch.data])
+    cand_len = jnp.concatenate([batch.length, batch.length])
+    data = state.data.at[slot].set(cand_data, mode="drop")
+    length = state.length.at[slot].set(cand_len, mode="drop")
+    dat = state.deliver_at.at[slot].set(
+        jnp.broadcast_to(deliver_at, (2 * n,)), mode="drop")
+    occupied = state.occupied.at[slot].set(True, mode="drop")
+
+    return LinkState(
+        data=data, length=length, deliver_at=dat, occupied=occupied,
+        pushed=state.pushed + batch.valid.sum().astype(jnp.int32),
+        lost=state.lost + (batch.valid & ~survives).sum().astype(jnp.int32),
+        overflowed=state.overflowed
+        + (cand_valid & ~fits).sum().astype(jnp.int32),
+        duplicated=state.duplicated + dup.sum().astype(jnp.int32),
+        delivered=state.delivered,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _pop(state: LinkState, now, n: int
+         ) -> Tuple[LinkState, pkt.PacketBatch]:
+    ready = state.occupied & (state.deliver_at <= jnp.asarray(now, jnp.int32))
+    rank = jnp.cumsum(ready.astype(jnp.int32)) - 1
+    take = ready & (rank < n)
+    order = jnp.argsort(~take, stable=True)[:n]        # taken slots first
+    out = pkt.PacketBatch(data=state.data[order],
+                          length=state.length[order],
+                          valid=take[order])
+    new = dataclasses.replace(
+        state, occupied=state.occupied & ~take,
+        delivered=state.delivered + take.sum().astype(jnp.int32))
+    return new, out
+
+
+class Link:
+    """One directed ingress pipe: every frame headed to a node traverses
+    its link before the NIC sees it."""
+
+    def __init__(self, cfg: LinkConfig = LinkConfig()):
+        self.cfg = cfg
+
+    def init_state(self) -> LinkState:
+        return make_state(self.cfg.capacity)
+
+    def push(self, state: LinkState, key: jax.Array, batch: pkt.PacketBatch,
+             now: int) -> LinkState:
+        return _push(self.cfg, state, key, batch, now)
+
+    def pop(self, state: LinkState, now: int, n: int
+            ) -> Tuple[LinkState, pkt.PacketBatch]:
+        return _pop(state, now, n)
+
+    def stats(self, state: LinkState) -> dict:
+        return {k: int(getattr(state, k)) for k in
+                ("pushed", "lost", "overflowed", "duplicated", "delivered")}

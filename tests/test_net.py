@@ -1,0 +1,207 @@
+"""Tests for repro.net: link model invariants, MAC routing, two-node
+SLMP reliability under loss, ping-pong, and fabric checkpointing."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import apps, packet as pkt, slmp
+from repro.net import (Fabric, Link, LinkConfig, Node, PingPongClient,
+                       SlmpSenderEngine)
+
+
+def _frames(n, nbytes=32):
+    return [pkt.make_udp(np.arange(nbytes, dtype=np.uint8))
+            for _ in range(n)]
+
+
+# ----------------------------------------------------------------- link
+def test_link_lossless_delivers_everything():
+    lk = Link(LinkConfig(loss=0.0, latency=2, capacity=64))
+    st = lk.push(lk.init_state(), jax.random.PRNGKey(0),
+                 pkt.stack_frames(_frames(16)), now=0)
+    st, out = lk.pop(st, now=1, n=16)
+    assert int(np.asarray(out.valid).sum()) == 0      # latency not elapsed
+    st, out = lk.pop(st, now=2, n=16)
+    assert int(np.asarray(out.valid).sum()) == 16
+    assert lk.stats(st)["lost"] == 0
+    # delivered frames carry their original bytes
+    i = int(np.argmax(np.asarray(out.valid)))
+    ln = int(np.asarray(out.length)[i])
+    np.testing.assert_array_equal(np.asarray(out.data)[i, :ln],
+                                  _frames(1)[0])
+
+
+def test_link_total_loss_delivers_nothing():
+    lk = Link(LinkConfig(loss=1.0, latency=1, capacity=64))
+    st = lk.push(lk.init_state(), jax.random.PRNGKey(0),
+                 pkt.stack_frames(_frames(8)), now=0)
+    assert lk.stats(st)["lost"] == 8
+    st, out = lk.pop(st, now=10, n=8)
+    assert int(np.asarray(out.valid).sum()) == 0
+
+
+def test_link_loss_is_deterministic_in_key():
+    lk = Link(LinkConfig(loss=0.5, latency=1, capacity=64))
+    batch = pkt.stack_frames(_frames(32))
+    s1 = lk.push(lk.init_state(), jax.random.PRNGKey(7), batch, 0)
+    s2 = lk.push(lk.init_state(), jax.random.PRNGKey(7), batch, 0)
+    s3 = lk.push(lk.init_state(), jax.random.PRNGKey(8), batch, 0)
+    assert lk.stats(s1) == lk.stats(s2)
+    np.testing.assert_array_equal(np.asarray(s1.occupied),
+                                  np.asarray(s2.occupied))
+    assert 0 < lk.stats(s1)["lost"] < 32               # p=.5, n=32
+    assert lk.stats(s3) != lk.stats(s1) or not np.array_equal(
+        np.asarray(s3.deliver_at), np.asarray(s1.deliver_at))
+
+
+def test_link_duplication_and_capacity_overflow():
+    lk = Link(LinkConfig(loss=0.0, duplicate=1.0, latency=1, capacity=12))
+    st = lk.push(lk.init_state(), jax.random.PRNGKey(0),
+                 pkt.stack_frames(_frames(8)), now=0)
+    s = lk.stats(st)
+    assert s["duplicated"] == 8
+    assert s["overflowed"] == 4                        # 16 candidates, 12 slots
+    st, out = lk.pop(st, now=5, n=16)
+    assert int(np.asarray(out.valid).sum()) == 12
+
+
+def test_link_jitter_reorders():
+    lk = Link(LinkConfig(loss=0.0, latency=1, jitter=6, capacity=128))
+    st = lk.init_state()
+    key = jax.random.PRNGKey(1)
+    # stamp each frame's payload with its send order
+    frames = []
+    for i in range(32):
+        f = pkt.make_udp(np.full(16, i, np.uint8))
+        frames.append(f)
+    st = lk.push(st, key, pkt.stack_frames(frames), now=0)
+    seen = []
+    for t in range(1, 12):
+        st, out = lk.pop(st, now=t, n=32)
+        v = np.asarray(out.valid)
+        for i in np.flatnonzero(v):
+            seen.append(int(np.asarray(out.data)[i, pkt.SLMP_BASE]))
+    assert sorted(seen) == list(range(32))             # all arrive
+    assert seen != list(range(32))                     # ...but not in order
+
+
+# --------------------------------------------------------------- fabric
+def _slmp_pair(nbytes, loss, seed=7, window=8, timeout=10, jitter=2,
+               duplicate=0.0):
+    rng = np.random.default_rng(0)
+    msg = rng.integers(0, 256, nbytes).astype(np.uint8)
+    cfg = slmp.SlmpSenderConfig(
+        window=window, mtu_payload=1024, timeout=timeout,
+        src_mac=pkt.node_mac(0), dst_mac=pkt.node_mac(1))
+    sender = SlmpSenderEngine(msg, msg_id=42, cfg=cfg)
+    a = Node("sender", pkt.node_mac(0), [apps.make_null_context()],
+             engines=[sender], batch=16)
+    b = Node("recv", pkt.node_mac(1), [slmp.make_slmp_context()],
+             batch=16, host_bytes=1 << 17)
+    fab = Fabric([a, b],
+                 link_cfg=LinkConfig(loss=loss, latency=2, jitter=jitter,
+                                     duplicate=duplicate),
+                 seed=seed)
+    return fab, sender, b, msg
+
+
+def test_fabric_slmp_lossless():
+    fab, sender, b, msg = _slmp_pair(20_000, loss=0.0)
+    fab.run(max_ticks=500)
+    assert sender.done and not sender.failed
+    assert sender.sender.retransmits == 0
+    np.testing.assert_array_equal(b.read_host(0, len(msg)), msg)
+    assert b.completions == [42]
+
+
+def test_fabric_slmp_survives_heavy_loss():
+    """Acceptance criterion: a multi-segment message completes at >=10%
+    simulated loss, and the retransmission path actually fires."""
+    fab, sender, b, msg = _slmp_pair(40_000, loss=0.15)
+    fab.run(max_ticks=5000)
+    assert sender.done and not sender.failed
+    assert sender.sender.nseg > 10                      # multi-segment
+    assert sender.sender.retransmits > 0                # retransmit fired
+    assert fab.link_stats()[1]["lost"] > 0              # loss really applied
+    np.testing.assert_array_equal(b.read_host(0, len(msg)), msg)
+    assert 42 in b.completions
+
+
+def test_fabric_slmp_survives_duplication_and_reordering():
+    fab, sender, b, msg = _slmp_pair(20_000, loss=0.1, jitter=5,
+                                     duplicate=0.2)
+    fab.run(max_ticks=5000)
+    assert sender.done
+    np.testing.assert_array_equal(b.read_host(0, len(msg)), msg)
+
+
+def test_fabric_unroutable_frames_counted():
+    cfg = slmp.SlmpSenderConfig(window=2, mtu_payload=512,
+                                src_mac=pkt.node_mac(0),
+                                dst_mac=b"\xff\xff\xff\xff\xff\xff")
+    sender = SlmpSenderEngine(np.zeros(1024, np.uint8), 1, cfg)
+    a = Node("a", pkt.node_mac(0), [apps.make_null_context()],
+             engines=[sender], batch=8)
+    fab = Fabric([a], seed=0)
+    for _ in range(3):
+        fab.tick()
+    assert fab.unroutable > 0
+
+
+def test_fabric_pingpong_rtt():
+    client = PingPongClient(count=3, proto="udp", src_mac=pkt.node_mac(0),
+                            dst_mac=pkt.node_mac(1))
+    a = Node("client", pkt.node_mac(0), [apps.make_null_context()],
+             engines=[client], batch=8)
+    b = Node("server", pkt.node_mac(1),
+             [apps.make_udp_pingpong_context()], batch=8)
+    fab = Fabric([a, b], link_cfg=LinkConfig(loss=0.0, latency=1), seed=0)
+    fab.run(max_ticks=100)
+    assert client.done
+    assert client.rtts == [2, 2, 2]        # 1 tick out + 1 tick back
+
+
+def test_fabric_checkpoint_restore_is_deterministic():
+    fab, sender, b, msg = _slmp_pair(20_000, loss=0.15, seed=5)
+    for _ in range(10):
+        fab.tick()
+    snap = fab.checkpoint()
+    fab.run(max_ticks=2000)
+    end1 = (fab.now, sender.sender.retransmits,
+            b.read_host(0, len(msg)).copy())
+    fab.restore(snap)
+    fab.run(max_ticks=2000)
+    end2 = (fab.now, sender.sender.retransmits,
+            b.read_host(0, len(msg)).copy())
+    assert end1[0] == end2[0] and end1[1] == end2[1]
+    np.testing.assert_array_equal(end1[2], end2[2])
+    np.testing.assert_array_equal(end1[2], msg)
+
+
+def test_node_drains_counters_from_packet_mode_contexts():
+    """Contexts without message_mode can still push_counter (icmp-host
+    mode): the node must drain their notifications too."""
+    client = PingPongClient(count=2, proto="icmp", src_mac=pkt.node_mac(0),
+                            dst_mac=pkt.node_mac(1), timeout=8)
+    a = Node("client", pkt.node_mac(0), [apps.make_null_context()],
+             engines=[client], batch=8)
+    b = Node("hostmode", pkt.node_mac(1), [apps.make_icmp_host_context()],
+             batch=8)
+    fab = Fabric([a, b], link_cfg=LinkConfig(loss=0.0, latency=1), seed=0)
+    for _ in range(6):
+        fab.tick()
+    # icmp-host handler pushes pkt_len per matched frame; no replies come
+    # back, so the client refires after its timeout — at least one push
+    assert len(b.completions) >= 1
+
+
+def test_slmp_sender_gives_up_after_max_retries():
+    cfg = slmp.SlmpSenderConfig(window=2, mtu_payload=512, timeout=2,
+                                max_retries=3)
+    sender = slmp.SlmpSender(np.zeros(2048, np.uint8), 9, cfg)
+    now = 0
+    while not (sender.done or sender.failed):
+        sender.poll(now)                   # frames vanish: 100% loss
+        now += 1
+        assert now < 1000
+    assert sender.failed and not sender.done

@@ -3,6 +3,9 @@ DDT pack/unpack laws, SLMP reassembly, checksum algebra, matcher
 consistency."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import alloc as palloc
