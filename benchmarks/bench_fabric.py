@@ -54,17 +54,22 @@ def _goodput_sweep(tx: Node, rx: Node, msg: np.ndarray) -> List[dict]:
             t_ns = ticks * TICK_NS
             gbps = len(msg) * 8 / t_ns if delivered else 0.0
             s = sender.sender
+            wire = fab.link_stats()[1]
             rec = dict(kind="slmp_goodput", loss=loss, window=window,
                        ticks=ticks, delivered=delivered,
                        segments=s.nseg, sent_frames=s.sent_frames,
                        retransmits=s.retransmits,
                        goodput_gbps=round(gbps, 3),
-                       wire=fab.link_stats()[1])
+                       wire=wire)
             records.append(rec)
+            # per-link drop/duplicate/reorder counters make loss-sweep
+            # anomalies diagnosable from the CSV alone
             row(f"fabric_slmp_loss{int(loss * 100)}_w{window}",
                 t_ns / 1e3,
                 f"gbps={gbps:.2f};retx={s.retransmits};"
-                f"delivered={delivered}")
+                f"delivered={delivered};lost={wire['lost']};"
+                f"dup={wire['duplicated']};reo={wire['reordered']};"
+                f"ovfl={wire['overflowed']}")
     return records
 
 
@@ -84,14 +89,18 @@ def _latency_sweep(server_ctx) -> List[dict]:
         fab.run(max_ticks=5_000)
         rtts = client.rtts
         mean_ticks = float(np.mean(rtts)) if rtts else float("nan")
+        wire = fab.link_stats()[1]
         rec = dict(kind="pingpong_latency", loss=loss,
                    completed=len(rtts), timeouts=client.timeouts,
                    mean_rtt_ticks=mean_ticks,
-                   mean_rtt_us=round(mean_ticks * TICK_NS / 1e3, 2))
+                   mean_rtt_us=round(mean_ticks * TICK_NS / 1e3, 2),
+                   wire=wire)
         records.append(rec)
         row(f"fabric_pingpong_loss{int(loss * 100)}",
             mean_ticks * TICK_NS / 1e3,
-            f"rtt_ticks={mean_ticks:.1f};timeouts={client.timeouts}")
+            f"rtt_ticks={mean_ticks:.1f};timeouts={client.timeouts};"
+            f"lost={wire['lost']};dup={wire['duplicated']};"
+            f"reo={wire['reordered']}")
     return records
 
 

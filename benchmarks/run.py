@@ -5,9 +5,16 @@
   bench_fabric   : Fig 8 over the net fabric (loss × window goodput sweep,
                    ping-pong latency vs loss) — also writes the
                    machine-readable ``BENCH_fabric.json``
-  bench_ddt      : Fig 10 (DDT throughput + overlap ratio)
+  bench_mpi      : Fig 10 end-to-end (MPI datatype offload overlap ratio
+                   through the lossy fabric, collective goodput vs node
+                   count) — writes ``BENCH_mpi.json``
+  bench_ddt      : Fig 10 (DDT throughput + overlap ratio, single NIC)
   bench_latency  : Table II (module latencies)
   bench_kernels  : Pallas kernel micro-benchmarks
+
+Usage: ``python -m benchmarks.run [filter]`` runs every suite whose name
+contains ``filter`` (all when omitted); ``--list`` prints the suite names.
+A filter matching nothing is an error, not a silent no-op.
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -19,20 +26,28 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_ddt, bench_fabric, bench_kernels,
-                            bench_latency, bench_pingpong, bench_slmp)
+                            bench_latency, bench_mpi, bench_pingpong,
+                            bench_slmp)
     suites = [
         ("fig7_pingpong", bench_pingpong.run),
         ("fig8_slmp", bench_slmp.run),
         ("fabric", bench_fabric.run),
         ("fig10_ddt", bench_ddt.run),
+        ("mpi", bench_mpi.run),
         ("table2_latency", bench_latency.run),
         ("kernels", bench_kernels.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only in ("--list", "-l"):
+        for name, _ in suites:
+            print(name)
+        return
+    selected = [(n, fn) for n, fn in suites if not only or only in n]
+    if not selected:
+        sys.exit(f"no benchmark suite matches {only!r}; available: "
+                 + ", ".join(n for n, _ in suites))
     print("name,us_per_call,derived")
-    for name, fn in suites:
-        if only and only not in name:
-            continue
+    for name, fn in selected:
         t0 = time.time()
         print(f"# --- {name} ---")
         fn()

@@ -1,0 +1,124 @@
+"""2-D halo exchange over the lossy fabric — MPI vector datatypes with the
+column unpack offloaded to each rank's SpinNIC.
+
+    PYTHONPATH=src python examples/halo_exchange.py [H] [W] [loss] [sweeps]
+
+Four ranks tile a periodic 2H×2W grid as a 2×2 process grid.  Each Jacobi
+sweep exchanges the halo ring with the four neighbours:
+
+  * row halos are contiguous      → eager SLMP messages;
+  * column halos are strided      → ``MPI_Type_vector(H, 1, W+2)``; the
+    receive side lands via the NIC DDT-unpack context, which scatters the
+    packed column straight into the ghost column of the field array
+    (stride and all) by host-memory DMA — no host unpack.
+
+After each exchange every rank relaxes its interior; the distributed
+result is checked against a single-domain numpy reference every sweep.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro import mpi
+from repro.core import ddt as ddtlib
+from repro.net import LinkConfig
+
+TAG_L, TAG_R, TAG_T, TAG_B = 1, 2, 3, 4
+
+
+def main():
+    H = int(sys.argv[1]) if len(sys.argv) > 1 else 32
+    W = int(sys.argv[2]) if len(sys.argv) > 2 else 48
+    loss = float(sys.argv[3]) if len(sys.argv) > 3 else 0.05
+    sweeps = int(sys.argv[4]) if len(sys.argv) > 4 else 3
+    PX = PY = 2
+    n = PX * PY
+
+    # column datatype: H floats, one per row of the (H+2, W+2) local field
+    reg = mpi.DatatypeRegistry()
+    col = reg.register(ddtlib.Vector(count=H, blocklen=1, stride=W + 2,
+                                     base=ddtlib.MPI_FLOAT), name="column")
+    col_bytes = reg.msg_bytes(col)
+    comm = mpi.Communicator(
+        n, registry=reg, seed=42,
+        link_cfg=LinkConfig(loss=loss, latency=2, jitter=2),
+        cfg=mpi.MpiConfig(eager_threshold=min(col_bytes, 4096)))
+    print(f"2x2 ranks, local {H}x{W} (+halo), loss {loss:.0%}; column "
+          f"halo = vector({H},1,{W + 2}) = {col_bytes}B "
+          f"{'(NIC-offloaded rendezvous)' if col_bytes >= comm.cfg.eager_threshold else '(eager)'}")
+
+    rng = np.random.default_rng(0)
+    fields = [rng.normal(size=(H + 2, W + 2)).astype(np.float32)
+              for _ in range(n)]
+    G = np.zeros((PY * H, PX * W), np.float32)        # reference domain
+    for r in range(n):
+        py, px = divmod(r, PX)
+        G[py * H:(py + 1) * H, px * W:(px + 1) * W] = fields[r][1:-1, 1:-1]
+
+    def flat_from(r, row, colidx):
+        """Contiguous flat view of fields[r] starting at (row, colidx) —
+        the strided column lives inside it (vector datatype extent)."""
+        return fields[r].reshape(-1)[row * (W + 2) + colidx:]
+
+    def exchange():
+        reqs = []
+        for r in range(n):
+            py, px = divmod(r, PX)
+            left = py * PX + (px - 1) % PX
+            right = py * PX + (px + 1) % PX
+            up = ((py - 1) % PY) * PX + px
+            down = ((py + 1) % PY) * PX + px
+            # columns: interior edge -> neighbour's ghost (vector datatype)
+            reqs.append(comm.irecv(r, flat_from(r, 1, W + 1),
+                                   source=right, tag=TAG_L))
+            reqs.append(comm.irecv(r, flat_from(r, 1, 0),
+                                   source=left, tag=TAG_R))
+            reqs.append(comm.isend(r, left, flat_from(r, 1, 1),
+                                   tag=TAG_L, datatype=col))
+            reqs.append(comm.isend(r, right, flat_from(r, 1, W),
+                                   tag=TAG_R, datatype=col))
+            # rows: contiguous -> raw eager messages
+            reqs.append(comm.irecv(r, fields[r][H + 1, 1:W + 1],
+                                   source=down, tag=TAG_T))
+            reqs.append(comm.irecv(r, fields[r][0, 1:W + 1],
+                                   source=up, tag=TAG_B))
+            reqs.append(comm.isend(r, up, fields[r][1, 1:W + 1],
+                                   tag=TAG_T))
+            reqs.append(comm.isend(r, down, fields[r][H, 1:W + 1],
+                                   tag=TAG_B))
+        comm.wait_list(reqs, max_ticks=300_000)
+
+    for sweep in range(sweeps):
+        t0 = comm.now
+        exchange()
+        ticks = comm.now - t0
+        # verify every exchanged ghost cell against the periodic global
+        # reference (corners are not exchanged — a 5-point stencil never
+        # reads them)
+        for r in range(n):
+            py, px = divmod(r, PX)
+            rows = np.arange(py * H - 1, (py + 1) * H + 1) % (PY * H)
+            cols = np.arange(px * W - 1, (px + 1) * W + 1) % (PX * W)
+            want = G[np.ix_(rows, cols)]
+            got = fields[r]
+            mask = np.ones_like(got, bool)
+            mask[0, 0] = mask[0, -1] = mask[-1, 0] = mask[-1, -1] = False
+            np.testing.assert_allclose(got[mask], want[mask], rtol=1e-6)
+        # Jacobi relaxation on the interior, and on the reference domain
+        for r in range(n):
+            f = fields[r]
+            f[1:-1, 1:-1] = 0.25 * (f[:-2, 1:-1] + f[2:, 1:-1]
+                                    + f[1:-1, :-2] + f[1:-1, 2:])
+        G = 0.25 * (np.roll(G, 1, 0) + np.roll(G, -1, 0)
+                    + np.roll(G, 1, 1) + np.roll(G, -1, 1))
+        retx = sum(s["retransmits"] for s in comm.stats())
+        print(f"sweep {sweep}: halo exchange ok in {ticks} ticks "
+              f"(cumulative retransmits {retx})")
+    lost = sum(l["lost"] for l in comm.link_stats())
+    print(f"halo_exchange OK — {sweeps} verified sweeps, "
+          f"{lost} frames lost on the wire and recovered")
+
+
+if __name__ == "__main__":
+    main()

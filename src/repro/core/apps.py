@@ -82,6 +82,30 @@ def make_icmp_host_context(host_base: int = 0) -> H.ExecutionContext:
         packet=icmp_to_host_packet_handler, host_base=host_base)
 
 
+# --------------------------------------------------------- shared helpers
+def _slmp_payload_lanes(args: H.HandlerArgs):
+    """Per-lane view of an SLMP segment's payload: ``(msg_pos, live)``
+    where ``msg_pos[l]`` is the message byte position lane ``l`` carries
+    and ``live`` masks the payload lanes of this packet.  Shared prologue
+    of every SLMP-transported scatter handler."""
+    offset = pkt.read_u32(args.pkt, pkt.SLMP_OFFSET).astype(jnp.int32)
+    lane = jnp.arange(pkt.MTU, dtype=jnp.int32)
+    msg_pos = offset + (lane - pkt.SLMP_PAYLOAD)
+    live = (lane >= pkt.SLMP_PAYLOAD) & (lane < args.pkt_len)
+    return msg_pos, live
+
+
+def _ack_if_syn(out: H.HandlerOut, args: H.HandlerArgs) -> H.HandlerOut:
+    """Per-packet SLMP ACK when the SYN flag is set (window-mode reliability,
+    paper §V-B) — shared by every SLMP-transported handler app."""
+    flags = pkt.read_u16(args.pkt, pkt.SLMP_FLAGS)
+    ack_data, ack_len = slmp._mk_ack(args.pkt, args.pkt_len)
+    syn = (flags & pkt.SLMP_FLAG_SYN) != 0
+    return out._replace(egress_data=ack_data,
+                        egress_len=jnp.where(syn, ack_len, 0),
+                        egress_valid=syn.astype(bool))
+
+
 # ------------------------------------------------------ MPI DDT processing
 def make_ddt_packet_handler(committed: ddtlib.CommittedDDT,
                             msgs_in_flight: int = 16):
@@ -95,23 +119,15 @@ def make_ddt_packet_handler(committed: ddtlib.CommittedDDT,
 
     def ddt_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
         out = H.none_out()
-        offset = pkt.read_u32(args.pkt, pkt.SLMP_OFFSET).astype(jnp.int32)
-        lane = jnp.arange(pkt.MTU, dtype=jnp.int32)
-        msg_pos = offset + (lane - pkt.SLMP_PAYLOAD)
-        live = (lane >= pkt.SLMP_PAYLOAD) & (lane < args.pkt_len) \
-            & (msg_pos < msg_len)
+        msg_pos, live = _slmp_payload_lanes(args)
+        live = live & (msg_pos < msg_len)
         mem_off = jnp.take(msg_to_mem, jnp.clip(msg_pos, 0, msg_len - 1))
         region = (args.msg_id.astype(jnp.int32) % msgs_in_flight) * mem_bytes
         dma_off = jnp.where(live, region + mem_off, -1)
         out = H.spin_dma_scatter(out, dma_off, args.pkt)
         out = H.add_msg_state(out, 1, args.pkt_len - pkt.SLMP_PAYLOAD)
         # per-packet ACK when SYN set (window=1 mode in the paper's runs)
-        flags = pkt.read_u16(args.pkt, pkt.SLMP_FLAGS)
-        ack_data, ack_len = slmp._mk_ack(args.pkt, args.pkt_len)
-        syn = (flags & pkt.SLMP_FLAG_SYN) != 0
-        return out._replace(egress_data=ack_data,
-                            egress_len=jnp.where(syn, ack_len, 0),
-                            egress_valid=syn.astype(bool))
+        return _ack_if_syn(out, args)
 
     return ddt_packet_handler
 
@@ -124,3 +140,82 @@ def make_ddt_context(committed: ddtlib.CommittedDDT, port: int = 9331,
         host_size=committed.mem_bytes * msgs_in_flight,
         name="mpi_ddt",
         packet_handler=make_ddt_packet_handler(committed, msgs_in_flight))
+
+
+# ----------------------------------------------- MPI messaging (repro.mpi)
+# msg_id bit layout shared between the host MPI library (repro.mpi.wire)
+# and the NIC handlers below.  The MPQ masks msg_id to 28 bits, so the
+# whole encoding must stay below bit 28:
+#
+#     [25:24] kind (1 = eager, 2 = rendezvous)
+#     [23:16] datatype id (rendezvous only)
+#     [15:0]  staging / rendezvous slot on the receiver
+MPI_KIND_EAGER = 1
+MPI_KIND_RDV = 2
+MPI_MSGID_KIND_SHIFT = 24
+MPI_MSGID_DTYPE_SHIFT = 16
+MPI_MSGID_DTYPE_MASK = 0xFF
+MPI_MSGID_SLOT_MASK = 0xFFFF
+
+
+def make_mpi_eager_context(port: int, n_slots: int, slot_bytes: int,
+                           host_base: int = 0) -> H.ExecutionContext:
+    """Eager-protocol receive context: each message lands in a per-sender
+    staging slot of the host window (slot index in the low msg_id bits);
+    the host matches tags and copies out after the sender's FIN.  The NIC
+    does reassembly + per-packet ACK; the host never touches a wire frame.
+    """
+
+    def eager_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+        out = H.none_out()
+        msg_id = args.msg_id.astype(jnp.int32)
+        slot = msg_id & MPI_MSGID_SLOT_MASK
+        rel, live = _slmp_payload_lanes(args)
+        live = live & (rel < slot_bytes) & (slot < n_slots)
+        dma_off = jnp.where(live, slot * slot_bytes + rel, -1)
+        out = H.spin_dma_scatter(out, dma_off, args.pkt)
+        out = H.add_msg_state(out, 1, args.pkt_len - pkt.SLMP_PAYLOAD)
+        return _ack_if_syn(out, args)
+
+    return slmp.make_slmp_context(
+        port=port, host_base=host_base, host_size=n_slots * slot_bytes,
+        name="mpi_eager", packet_handler=eager_packet_handler)
+
+
+def make_mpi_ddt_context(maps, msg_lens, region_bytes: int, n_slots: int,
+                         port: int, host_base: int = 0
+                         ) -> H.ExecutionContext:
+    """Rendezvous receive context with *offloaded datatype processing*:
+    payload bytes scatter through the committed msg→mem index map of the
+    datatype named in the msg_id, straight into the posted receive region
+    (``slot * region_bytes``) of host memory — the dataloop-engine offload
+    of paper §V-C, generalized to a table of committed datatypes.
+
+    ``maps``: (D, Mmax) int32, msg→mem byte map per datatype, -1-padded;
+    ``msg_lens``: (D,) int32 serialized size per datatype.
+    """
+    maps = jnp.asarray(maps, jnp.int32)
+    msg_lens = jnp.asarray(msg_lens, jnp.int32)
+    n_types, max_msg = maps.shape
+    assert n_types >= 1 and max_msg >= 1
+
+    def mpi_ddt_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
+        out = H.none_out()
+        msg_id = args.msg_id.astype(jnp.int32)
+        slot = msg_id & MPI_MSGID_SLOT_MASK
+        dtype = (msg_id >> MPI_MSGID_DTYPE_SHIFT) & MPI_MSGID_DTYPE_MASK
+        row = maps[jnp.clip(dtype, 0, n_types - 1)]
+        msg_len = msg_lens[jnp.clip(dtype, 0, n_types - 1)]
+        msg_pos, live = _slmp_payload_lanes(args)
+        live = live & (msg_pos < msg_len) & (slot < n_slots) \
+            & (dtype < n_types)
+        mem_off = jnp.take(row, jnp.clip(msg_pos, 0, max_msg - 1))
+        dma_off = jnp.where(live & (mem_off >= 0),
+                            slot * region_bytes + mem_off, -1)
+        out = H.spin_dma_scatter(out, dma_off, args.pkt)
+        out = H.add_msg_state(out, 1, args.pkt_len - pkt.SLMP_PAYLOAD)
+        return _ack_if_syn(out, args)
+
+    return slmp.make_slmp_context(
+        port=port, host_base=host_base, host_size=n_slots * region_bytes,
+        name="mpi_ddt_unpack", packet_handler=mpi_ddt_packet_handler)

@@ -1,0 +1,33 @@
+"""repro.mpi — MPI point-to-point and collectives over the fabric, with
+receive-side datatype processing offloaded to the SpinNIC (paper §V-C as a
+real multi-node experiment).
+
+  wire.py          envelopes, msg_id packing, reliable control datagrams
+  datatypes.py     committed-datatype registry (dataloop commit + tables)
+  engine.py        per-rank host engine: tag matching, eager/rendezvous
+  communicator.py  ranks ↔ fabric nodes, requests, progress
+  collectives.py   bcast / reduce / allreduce / alltoall(v) / barrier
+
+Quick taste::
+
+    from repro import mpi
+    from repro.core import ddt
+
+    reg = mpi.DatatypeRegistry()
+    col = reg.register(ddt.Vector(64, 1, 8, ddt.MPI_FLOAT), count=1)
+    comm = mpi.Communicator(4, registry=reg)
+    r = comm.irecv(1, buf, source=mpi.ANY_SOURCE, tag=7)
+    s = comm.isend(0, 1, data, tag=7, datatype=col)   # NIC unpacks
+    comm.wait(r, s)
+"""
+from repro.mpi.collectives import (allreduce, alltoall, alltoallv, barrier,
+                                   bcast, reduce)
+from repro.mpi.communicator import Communicator, MpiConfig
+from repro.mpi.datatypes import DatatypeRegistry
+from repro.mpi.engine import ANY_SOURCE, ANY_TAG, MpiHostEngine, Request
+from repro.mpi.wire import CTRL_PORT, DATA_PORT, EAGER_PORT
+
+__all__ = ["Communicator", "MpiConfig", "DatatypeRegistry", "MpiHostEngine",
+           "Request", "ANY_SOURCE", "ANY_TAG", "bcast", "reduce",
+           "allreduce", "alltoall", "alltoallv", "barrier",
+           "EAGER_PORT", "DATA_PORT", "CTRL_PORT"]

@@ -1,0 +1,175 @@
+"""Collectives composed from point-to-point (MPI Chapter 5 over the fabric).
+
+Every algorithm here is a *reactive plan*: each rank posts its first
+operation, and completion callbacks post the follow-on sends — the natural
+shape for a tick-driven fabric, and exactly how tree collectives overlap
+under loss (a subtree whose link is clean makes progress while another
+subtree retransmits).
+
+  bcast      binomial tree (log₂ n rounds)
+  reduce     binomial tree combine toward the root
+  allreduce  reduce + bcast
+  alltoall   pairwise exchange, source-matched
+  alltoallv  pairwise exchange with per-pair block sizes
+  barrier    zero-byte allreduce
+
+Buffers are numpy arrays (any dtype, C-contiguous); messages travel as raw
+bytes, so reduce's ``op`` runs on the typed views.  Collectives reserve
+tags at/above ``COLL_TAG_BASE`` — keep user tags below it.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+from repro.mpi.communicator import Communicator
+
+COLL_TAG_BASE = 1 << 20
+TAG_BCAST = COLL_TAG_BASE + 0
+TAG_REDUCE = COLL_TAG_BASE + 1
+TAG_A2A = COLL_TAG_BASE + 2
+
+
+def _vrank(r: int, root: int, n: int) -> int:
+    return (r - root) % n
+
+
+def _prank(v: int, root: int, n: int) -> int:
+    return (v + root) % n
+
+
+def _children(v: int, n: int) -> List[int]:
+    """Binomial-tree children of virtual rank ``v``."""
+    m = 1 if v == 0 else 1 << v.bit_length()
+    out = []
+    while v + m < n:
+        out.append(v + m)
+        m <<= 1
+    return out
+
+
+def _parent(v: int) -> int:
+    return v - (1 << (v.bit_length() - 1))
+
+
+def bcast(comm: Communicator, bufs: Sequence[np.ndarray], root: int = 0,
+          max_ticks: int = 200_000) -> None:
+    """Broadcast ``bufs[root]`` into every rank's ``bufs[r]`` (in place)."""
+    n = comm.n_ranks
+    if n == 1:
+        return
+    pending: List = []
+
+    def fanout(r: int) -> None:
+        v = _vrank(r, root, n)
+        for c in _children(v, n):
+            pending.append(comm.isend(r, _prank(c, root, n), bufs[r],
+                                      tag=TAG_BCAST))
+
+    for r in range(n):
+        v = _vrank(r, root, n)
+        if v == 0:
+            fanout(r)
+        else:
+            req = comm.irecv(r, bufs[r],
+                             source=_prank(_parent(v), root, n),
+                             tag=TAG_BCAST)
+            req.add_done_callback(lambda _q, r=r: fanout(r))
+            pending.append(req)
+    comm.wait_list(pending, max_ticks=max_ticks)
+
+
+def reduce(comm: Communicator, sendbufs: Sequence[np.ndarray],
+           root: int = 0, op: Callable = np.add,
+           max_ticks: int = 200_000) -> np.ndarray:
+    """Combine every rank's array with ``op`` toward ``root``; returns the
+    reduced array (meaningful at the root, like MPI_Reduce)."""
+    n = comm.n_ranks
+    accs = [np.ascontiguousarray(b).copy() for b in sendbufs]
+    if n == 1:
+        return accs[root]
+    tmps = [np.empty_like(a) for a in accs]
+    pending: List = []
+
+    def step(r: int, mask: int) -> None:
+        v = _vrank(r, root, n)
+        while mask < n:
+            if v & mask:
+                peer = _prank(v - mask, root, n)
+                pending.append(comm.isend(r, peer, accs[r],
+                                          tag=TAG_REDUCE))
+                return
+            if v + mask < n:
+                peer = _prank(v + mask, root, n)
+                req = comm.irecv(r, tmps[r], source=peer, tag=TAG_REDUCE)
+
+                def combine(_q, r=r, mask=mask):
+                    accs[r][...] = op(accs[r], tmps[r])
+                    step(r, mask << 1)
+
+                req.add_done_callback(combine)
+                pending.append(req)
+                return
+            mask <<= 1
+
+    for r in range(n):
+        step(r, 1)
+    comm.wait_list(pending, max_ticks=max_ticks)
+    return accs[root]
+
+
+def allreduce(comm: Communicator, sendbufs: Sequence[np.ndarray],
+              op: Callable = np.add,
+              max_ticks: int = 200_000) -> List[np.ndarray]:
+    """reduce-to-0 + bcast; returns the per-rank result arrays."""
+    res = reduce(comm, sendbufs, root=0, op=op, max_ticks=max_ticks)
+    outs = [np.empty_like(res) for _ in range(comm.n_ranks)]
+    outs[0][...] = res
+    bcast(comm, outs, root=0, max_ticks=max_ticks)
+    return outs
+
+
+def alltoall(comm: Communicator, sends: Sequence[np.ndarray],
+             max_ticks: int = 200_000) -> List[np.ndarray]:
+    """``sends[r][j]`` goes to rank ``j``; returns ``recvs`` with
+    ``recvs[r][i] == sends[i][r]`` (personalized exchange)."""
+    n = comm.n_ranks
+    recvs = [np.empty_like(np.ascontiguousarray(s)) for s in sends]
+    pending: List = []
+    for r in range(n):
+        s = np.ascontiguousarray(sends[r])
+        assert s.shape[0] == n, "alltoall sends need one block per rank"
+        for j in range(n):
+            pending.append(comm.irecv(r, recvs[r][j], source=j,
+                                      tag=TAG_A2A))
+            pending.append(comm.isend(r, j, s[j], tag=TAG_A2A))
+    comm.wait_list(pending, max_ticks=max_ticks)
+    return recvs
+
+
+def alltoallv(comm: Communicator,
+              blocks: Sequence[Sequence[np.ndarray]],
+              max_ticks: int = 200_000) -> List[List[np.ndarray]]:
+    """Variable-size exchange: ``blocks[r][j]`` goes from rank r to rank j;
+    returns ``recvs[r][i]`` = block received at r from i (zero-size blocks
+    allowed)."""
+    n = comm.n_ranks
+    recvs = [[np.empty_like(np.ascontiguousarray(blocks[i][r]))
+              for i in range(n)] for r in range(n)]
+    pending: List = []
+    for r in range(n):
+        for j in range(n):
+            pending.append(comm.irecv(r, recvs[r][j], source=j,
+                                      tag=TAG_A2A))
+            pending.append(comm.isend(r, j,
+                                      np.ascontiguousarray(blocks[r][j]),
+                                      tag=TAG_A2A))
+    comm.wait_list(pending, max_ticks=max_ticks)
+    return recvs
+
+
+def barrier(comm: Communicator, max_ticks: int = 200_000) -> None:
+    """No rank leaves before every rank arrived (zero-byte allreduce)."""
+    allreduce(comm, [np.zeros(1, np.uint8) for _ in range(comm.n_ranks)],
+              max_ticks=max_ticks)

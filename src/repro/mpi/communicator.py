@@ -1,0 +1,199 @@
+"""The Communicator: N MPI ranks as nodes of a lossy fabric.
+
+Builds one shared :class:`~repro.core.spin_nic.SpinNIC` (every rank runs
+identical execution contexts — eager staging + DDT-unpack offload — so the
+jitted datapath compiles once for the whole job), wires one
+:class:`MpiHostEngine` per rank into a :class:`~repro.net.fabric.Fabric`,
+and maps rank *i* to MAC ``node_mac(i)``.
+
+Progress is explicit, like any discrete-event co-simulation: nonblocking
+``isend``/``irecv`` return :class:`Request` handles, and :meth:`wait` /
+:meth:`run_until` tick the fabric until they complete.  The blocking
+``send``/``recv`` wrappers do the ticking themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import apps
+from repro.core import packet as pkt
+from repro.core import spin_nic
+from repro.mpi import wire
+from repro.mpi.datatypes import DatatypeRegistry
+from repro.mpi.engine import (ANY_SOURCE, ANY_TAG, MpiHostEngine, MpiParams,
+                              Request)
+from repro.net import Fabric, LinkConfig, Node
+
+
+@dataclasses.dataclass(frozen=True)
+class MpiConfig:
+    """Tunables of the messaging layer (defaults sized for simulation)."""
+    eager_threshold: int = 4096      # >= this (packed, typed) → rendezvous
+    eager_slots_per_src: int = 4
+    eager_slot_bytes: int = 1 << 15
+    n_rdv_slots: int = 4
+    slot_quarantine: int = 32        # ticks before a freed eager/rdv slot
+    #                                  is reused (late duplicate frames)
+    mtu_payload: int = 1024
+    slmp_window: int = 16
+    slmp_timeout: int = 12
+    slmp_max_retries: int = 64
+    ctl_timeout: int = 16
+    ctl_max_retries: int = 400
+    batch: int = 16                  # NIC ingress batch per tick
+
+
+class Communicator:
+    def __init__(self, n_ranks: int,
+                 registry: Optional[DatatypeRegistry] = None,
+                 link_cfg: LinkConfig = LinkConfig(latency=2),
+                 link_cfgs: Optional[Sequence[LinkConfig]] = None,
+                 seed: int = 0, cfg: MpiConfig = MpiConfig()):
+        assert n_ranks >= 1
+        self.n_ranks = n_ranks
+        self.cfg = cfg
+        self.registry = registry if registry is not None \
+            else DatatypeRegistry()
+        self.registry.freeze()
+
+        macs = tuple(pkt.node_mac(r) for r in range(n_ranks))
+        eager_total = n_ranks * cfg.eager_slots_per_src \
+            * cfg.eager_slot_bytes
+        rdv_region = max(8, -(-self.registry.max_mem_bytes // 8) * 8)
+        contexts = [apps.make_mpi_eager_context(
+            wire.EAGER_PORT,
+            n_slots=n_ranks * cfg.eager_slots_per_src,
+            slot_bytes=cfg.eager_slot_bytes, host_base=0)]
+        if len(self.registry):
+            maps, lens = self.registry.tables()
+            contexts.append(apps.make_mpi_ddt_context(
+                maps, lens, region_bytes=rdv_region,
+                n_slots=cfg.n_rdv_slots, port=wire.DATA_PORT,
+                host_base=eager_total))
+        host_bytes = eager_total + cfg.n_rdv_slots * rdv_region
+
+        self.params = MpiParams(
+            n_ranks=n_ranks, macs=macs,
+            eager_threshold=cfg.eager_threshold,
+            eager_slots_per_src=cfg.eager_slots_per_src,
+            eager_slot_bytes=cfg.eager_slot_bytes, eager_base=0,
+            n_rdv_slots=cfg.n_rdv_slots, rdv_region_bytes=rdv_region,
+            rdv_base=eager_total, slot_quarantine=cfg.slot_quarantine,
+            mtu_payload=cfg.mtu_payload, slmp_window=cfg.slmp_window,
+            slmp_timeout=cfg.slmp_timeout,
+            slmp_max_retries=cfg.slmp_max_retries,
+            ctl_timeout=cfg.ctl_timeout,
+            ctl_max_retries=cfg.ctl_max_retries)
+
+        # one NIC (and one compiled datapath) shared by every rank
+        self.nic = spin_nic.SpinNIC(contexts, host_bytes=host_bytes,
+                                    batch=cfg.batch)
+        self.engines: List[MpiHostEngine] = []
+        self.nodes: List[Node] = []
+        for r in range(n_ranks):
+            engine = MpiHostEngine(r, self.registry, self.params)
+            node = Node(f"rank{r}", macs[r], nic=self.nic,
+                        engines=[engine])
+            engine.attach(node)
+            self.engines.append(engine)
+            self.nodes.append(node)
+        self.link_cfg = link_cfg
+        self.link_cfgs = list(link_cfgs) if link_cfgs is not None else None
+        self.fabric = Fabric(self.nodes, link_cfg=link_cfg,
+                             link_cfgs=self.link_cfgs, seed=seed)
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def now(self) -> int:
+        return self.fabric.now
+
+    def rewire(self, link_cfg: Optional[LinkConfig] = None,
+               link_cfgs: Optional[Sequence[LinkConfig]] = None,
+               seed: int = 0) -> None:
+        """Fresh engines/NIC-states/links (optionally new link configs)
+        without recompiling the shared datapath — sweeps reuse one comm."""
+        if link_cfg is not None:
+            self.link_cfg = link_cfg
+            self.link_cfgs = None
+        if link_cfgs is not None:
+            self.link_cfgs = list(link_cfgs)
+        self.engines = []
+        for r, node in enumerate(self.nodes):
+            engine = MpiHostEngine(r, self.registry, self.params)
+            node.reset(engines=[engine])
+            engine.attach(node)
+            self.engines.append(engine)
+        self.fabric = Fabric(self.nodes, link_cfg=self.link_cfg,
+                             link_cfgs=self.link_cfgs, seed=seed)
+
+    def reset(self, seed: int = 0) -> None:
+        self.rewire(seed=seed)
+
+    # ------------------------------------------------------- point-to-point
+    def isend(self, src: int, dest: int, data: np.ndarray, tag: int = 0,
+              datatype=None) -> Request:
+        return self.engines[src].isend(dest, data, tag=tag,
+                                       datatype=datatype)
+
+    def irecv(self, rank: int, buf: np.ndarray, source: int = ANY_SOURCE,
+              tag: int = ANY_TAG) -> Request:
+        return self.engines[rank].irecv(buf, source=source, tag=tag)
+
+    def send(self, src: int, dest: int, data: np.ndarray, tag: int = 0,
+             datatype=None, max_ticks: int = 100_000) -> Request:
+        req = self.isend(src, dest, data, tag=tag, datatype=datatype)
+        self.wait(req, max_ticks=max_ticks)
+        return req
+
+    def recv(self, rank: int, buf: np.ndarray, source: int = ANY_SOURCE,
+             tag: int = ANY_TAG, max_ticks: int = 100_000) -> Request:
+        req = self.irecv(rank, buf, source=source, tag=tag)
+        self.wait(req, max_ticks=max_ticks)
+        return req
+
+    # -------------------------------------------------------------- progress
+    def progress(self, ticks: int = 1) -> None:
+        for _ in range(ticks):
+            self.fabric.tick()
+
+    def run_until(self, predicate: Callable[[], bool],
+                  max_ticks: int = 100_000) -> int:
+        """Tick the fabric until ``predicate()`` holds.  Raises on engine
+        failure (exhausted retries) or timeout."""
+        t0 = self.fabric.now
+        while not predicate():
+            if self.fabric.now - t0 >= max_ticks:
+                raise RuntimeError(
+                    f"MPI progress timed out after {max_ticks} ticks; "
+                    f"engines: " + "; ".join(
+                        f"rank{e.rank} done={e.done} stats={e.stats}"
+                        for e in self.engines))
+            self.fabric.tick()
+            for e in self.engines:
+                if e.failed:
+                    raise RuntimeError("; ".join(e.errors))
+        return self.fabric.now - t0
+
+    def wait(self, *reqs: Request, max_ticks: int = 100_000) -> int:
+        return self.wait_list(list(reqs), max_ticks=max_ticks)
+
+    def wait_list(self, reqs: List[Request],
+                  max_ticks: int = 100_000) -> int:
+        """Wait on a (possibly growing) list of requests — collective
+        algorithms append follow-on requests from completion callbacks."""
+        ticks = self.run_until(lambda: all(r.done for r in reqs),
+                               max_ticks=max_ticks)
+        errs = [r.error for r in reqs if r.error]
+        if errs:
+            raise RuntimeError("; ".join(errs))
+        return ticks
+
+    # --------------------------------------------------------- observability
+    def stats(self) -> List[dict]:
+        return [dict(e.stats) for e in self.engines]
+
+    def link_stats(self) -> List[dict]:
+        return self.fabric.link_stats()

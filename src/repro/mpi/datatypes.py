@@ -1,0 +1,118 @@
+"""Committed-datatype registry shared by all ranks of a communicator.
+
+MPI requires types to be *committed* before use; here commitment runs the
+dataloop specialization of :mod:`repro.core.ddt` (flatten → byte index
+maps) and additionally uploads every committed map into one padded device
+table, so the NIC-side unpack handler
+(:func:`repro.core.apps.make_mpi_ddt_context`) can select the right map
+per message from the dtype id carried in the SLMP msg_id.  Like real MPI
+type commitment under SPMD, the registry must be identical on every rank
+— one registry object is shared by all nodes of a communicator.
+
+The registry also owns the *host-side* pack/unpack paths: senders pack on
+the host (the paper offloads the receive side), and eager receives fall
+back to host unpack — the comparison baseline for the offload benchmark.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import ddt as ddtlib
+
+DTypeLike = Union[int, ddtlib.DDT, Tuple[ddtlib.DDT, int]]
+
+
+class DatatypeRegistry:
+    def __init__(self):
+        self._committed: List[ddtlib.CommittedDDT] = []
+        self._names: List[str] = []
+        self._frozen = False
+
+    def __len__(self) -> int:
+        return len(self._committed)
+
+    def register(self, ddt: ddtlib.DDT, count: int = 1,
+                 name: Optional[str] = None) -> int:
+        """Commit ``count`` instances of ``ddt``; returns the dtype id."""
+        assert not self._frozen, \
+            "registry is frozen (a Communicator was already built on it)"
+        c = ddtlib.commit(ddt, count)
+        assert c.msg_bytes > 0, "cannot register an empty datatype"
+        self._committed.append(c)
+        self._names.append(name or f"dtype{len(self._committed) - 1}")
+        return len(self._committed) - 1
+
+    def freeze(self) -> None:
+        self._frozen = True
+
+    def resolve(self, dtype: DTypeLike) -> int:
+        """Accept a dtype id, a registered DDT (count=1), or (DDT, count)."""
+        if isinstance(dtype, int):
+            assert 0 <= dtype < len(self._committed), f"bad dtype id {dtype}"
+            return dtype
+        ddt, count = dtype if isinstance(dtype, tuple) else (dtype, 1)
+        for i, c in enumerate(self._committed):
+            if c.ddt == ddt and c.count == count:
+                return i
+        raise KeyError(f"datatype {ddt}×{count} not registered")
+
+    def committed(self, dtype_id: int) -> ddtlib.CommittedDDT:
+        return self._committed[dtype_id]
+
+    def name(self, dtype_id: int) -> str:
+        return self._names[dtype_id]
+
+    def msg_bytes(self, dtype_id: int) -> int:
+        return self._committed[dtype_id].msg_bytes
+
+    def mem_bytes(self, dtype_id: int) -> int:
+        return self._committed[dtype_id].mem_bytes
+
+    def mem_mask(self, dtype_id: int) -> np.ndarray:
+        """(mem_bytes,) bool — bytes the datatype actually writes."""
+        return self._committed[dtype_id].mem_to_msg >= 0
+
+    # ------------------------------------------------------- device tables
+    @property
+    def max_mem_bytes(self) -> int:
+        return max((c.mem_bytes for c in self._committed), default=0)
+
+    def tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(maps, msg_lens) for the NIC unpack handler: maps (D, Mmax)
+        int32 msg→mem byte offsets padded with -1, msg_lens (D,) int32.
+
+        Overlapping layouts are *deduplicated*: a message byte that is not
+        the last serialized occurrence of its memory byte maps to -1 (DMA
+        skip).  Packets then commute — MPI's last-occurrence-wins unpack
+        holds regardless of segment arrival/retransmission order on the
+        lossy wire, with every memory byte written exactly once."""
+        n = len(self._committed)
+        mmax = max(max((c.msg_bytes for c in self._committed), default=0), 1)
+        maps = np.full((max(n, 1), mmax), -1, np.int32)
+        lens = np.zeros((max(n, 1),), np.int32)
+        for i, c in enumerate(self._committed):
+            winner = c.mem_to_msg[c.msg_to_mem] == np.arange(
+                c.msg_bytes, dtype=np.int32)
+            maps[i, :c.msg_bytes] = np.where(winner, c.msg_to_mem, -1)
+            lens[i] = c.msg_bytes
+        return maps, lens
+
+    # --------------------------------------------------- host (un)pack path
+    def pack(self, dtype_id: int, mem: np.ndarray) -> np.ndarray:
+        """Serialize from a memory-layout uint8 buffer (sender side)."""
+        c = self._committed[dtype_id]
+        mem = np.ascontiguousarray(mem).reshape(-1).view(np.uint8)
+        assert mem.size >= c.mem_bytes, \
+            f"send buffer {mem.size}B < datatype extent {c.mem_bytes}B"
+        return ddtlib.pack_np(c, mem[:c.mem_bytes])
+
+    def unpack_into(self, dtype_id: int, msg: np.ndarray,
+                    mem: np.ndarray) -> None:
+        """Host-side unpack (eager fallback): scatter serialized bytes into
+        ``mem`` in serialization order — last occurrence wins on overlap."""
+        c = self._committed[dtype_id]
+        view = mem.reshape(-1).view(np.uint8)
+        assert view.size >= c.mem_bytes
+        view[c.msg_to_mem] = msg[:c.msg_bytes]

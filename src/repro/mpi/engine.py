@@ -1,0 +1,473 @@
+"""The per-rank MPI host engine — MPI's progress engine as a fabric node.
+
+One :class:`MpiHostEngine` rides on each rank's :class:`~repro.net.node.Node`
+and implements the host half of the messaging layer:
+
+  * **tag matching** with MPI semantics: posted receives match in post
+    order, arrivals match in arrival order, ``ANY_SOURCE`` / ``ANY_TAG``
+    wildcards, and an unexpected-message queue for sends that beat their
+    receive;
+  * **eager protocol** (small messages): payload goes straight out over
+    the SLMP sender state machine to the peer's NIC eager context, which
+    reassembles it into a per-sender staging slot; a FIN control message
+    (sent once every segment is ACKed, so the data is known to be in host
+    memory) carries the envelope and triggers matching;
+  * **rendezvous protocol** (registered datatypes at/above the eager
+    threshold): RTS → match → CTS (carrying a receive slot) → SLMP data to
+    the NIC *DDT-unpack* context — the receive-side datatype processing
+    runs entirely on the NIC, scattering payload bytes through the
+    committed index map into the posted region — → FIN completes the
+    receive with a masked copy-out (no host unpack on the critical path).
+
+All control traffic uses the reliable :class:`~repro.mpi.wire.CtlEndpoint`;
+all bulk data uses SLMP retransmission — the whole layer survives loss,
+duplication and reordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import packet as pkt
+from repro.core import slmp
+from repro.mpi import wire
+from repro.mpi.datatypes import DatatypeRegistry
+from repro.net.node import HostEngine
+
+ANY_SOURCE = wire.ANY_SOURCE
+ANY_TAG = wire.ANY_TAG
+MAX_TAG = (1 << 30) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MpiParams:
+    """Resolved, rank-independent parameters (built by the Communicator)."""
+    n_ranks: int
+    macs: Tuple[bytes, ...]
+    eager_threshold: int
+    eager_slots_per_src: int
+    eager_slot_bytes: int
+    eager_base: int
+    n_rdv_slots: int
+    rdv_region_bytes: int
+    rdv_base: int
+    slot_quarantine: int          # ticks before a freed rdv slot is reusable
+    mtu_payload: int
+    slmp_window: int
+    slmp_timeout: int
+    slmp_max_retries: int
+    ctl_timeout: int
+    ctl_max_retries: int
+
+
+class Request:
+    """Nonblocking operation handle (MPI_Request).  ``done`` flips when the
+    operation completes; for receives, ``source``/``tag``/``nbytes`` then
+    report the matched envelope (MPI_Status)."""
+
+    def __init__(self, kind: str, buf: Optional[np.ndarray] = None,
+                 source: int = ANY_SOURCE, tag: int = ANY_TAG):
+        self.kind = kind                  # "send" | "recv"
+        self.buf = buf
+        self.source = source              # recv: match filter, then sender
+        self.tag = tag
+        self.done = False
+        self.error: Optional[str] = None
+        self.nbytes = 0
+        self._cbs: List[Callable[["Request"], None]] = []
+
+    def add_done_callback(self, cb: Callable[["Request"], None]) -> None:
+        if self.done:
+            cb(self)
+        else:
+            self._cbs.append(cb)
+
+    def _complete(self, source: Optional[int] = None,
+                  tag: Optional[int] = None, nbytes: int = 0,
+                  error: Optional[str] = None) -> None:
+        assert not self.done
+        if source is not None:
+            self.source = source
+        if tag is not None:
+            self.tag = tag
+        self.nbytes = nbytes
+        self.error = error
+        self.done = True
+        cbs, self._cbs = self._cbs, []
+        for cb in cbs:
+            cb(self)
+
+    def __repr__(self):
+        state = "done" if self.done else "pending"
+        return (f"Request({self.kind}, {state}, src={self.source}, "
+                f"tag={self.tag}, nbytes={self.nbytes})")
+
+
+@dataclasses.dataclass
+class _Envelope:
+    """Unexpected-queue entry: an arrived eager message (payload already
+    copied out of the staging slot) or a pending rendezvous RTS."""
+    kind: str                 # "eager" | "rts"
+    ctl: wire.Ctl
+    payload: Optional[np.ndarray] = None
+
+
+def _u8view(buf: np.ndarray) -> np.ndarray:
+    assert buf.flags["C_CONTIGUOUS"], "MPI buffers must be C-contiguous"
+    return buf.reshape(-1).view(np.uint8)
+
+
+class MpiHostEngine(HostEngine):
+    def __init__(self, rank: int, registry: DatatypeRegistry,
+                 params: MpiParams):
+        self.rank = rank
+        self.registry = registry
+        self.p = params
+        self._node = None                       # set by attach()
+        self.ctl = wire.CtlEndpoint(rank, list(params.macs),
+                                    timeout=params.ctl_timeout,
+                                    max_retries=params.ctl_max_retries)
+        self.ctl.deliver = self._on_ctl
+        self.ctl.on_give_up = self._on_ctl_give_up
+        self._now = 0
+        # ---- send side
+        self._eager_seq: Dict[int, int] = {}
+        self._msg_seq: Dict[int, int] = {}
+        self._mseq_tx: Dict[int, int] = {}      # matching seq per dest
+        self._eager_queue: Dict[int, Deque[dict]] = {}
+        self._eager_inflight: Dict[int, Dict[int, dict]] = {}
+        # (dest, slot) -> tick before which the staging slot must not be
+        # reused: a duplicated/reorder-delayed data frame of the previous
+        # message (same msg_id — the NIC addresses purely by slot) could
+        # still be in flight right after its FIN is acked
+        self._eager_cooldown: Dict[Tuple[int, int], int] = {}
+        self._rdv_sends: Dict[Tuple[int, int], dict] = {}
+        self._active: List[dict] = []           # live SLMP data senders
+        # ---- receive side
+        self._posted: List[Request] = []
+        self._unexpected: Deque[_Envelope] = deque()
+        # MPI non-overtaking: envelopes from one sender enter tag matching
+        # in *send* order (mseq), even though an RTS datagram can beat an
+        # earlier eager message's FIN onto the wire
+        self._mseq_rx: Dict[int, int] = {}
+        self._mseq_pending: Dict[int, Dict[int, _Envelope]] = {}
+        self._rdv_recv: Dict[int, Tuple[Request, wire.Ctl]] = {}
+        self._free_slots: List[int] = list(range(params.n_rdv_slots))
+        self._quarantine: Deque[Tuple[int, int]] = deque()
+        self._cts_waiting: Deque[Tuple[Request, wire.Ctl]] = deque()
+        # ---- accounting
+        self.stats = dict(eager_sent=0, rdv_sent=0, bytes_sent=0,
+                          bytes_recv=0, unexpected=0, retransmits=0)
+        self.errors: List[str] = []
+
+    def attach(self, node) -> None:
+        """Bind to the Node whose NIC host window we read (the mmap view)."""
+        self._node = node
+
+    # ------------------------------------------------------------- public
+    def isend(self, dest: int, data: np.ndarray, tag: int = 0,
+              datatype=None) -> Request:
+        assert 0 <= dest < self.p.n_ranks, f"bad destination {dest}"
+        assert 0 <= tag <= MAX_TAG, f"bad tag {tag}"
+        data = np.ascontiguousarray(data)
+        if datatype is not None:
+            dtype_id = self.registry.resolve(datatype)
+            payload = self.registry.pack(dtype_id, data)
+        else:
+            dtype_id = wire.NO_DTYPE
+            payload = _u8view(data).copy()
+        req = Request("send", source=self.rank, tag=tag)
+        req.nbytes = payload.size
+        self.stats["bytes_sent"] += payload.size
+        if dest == self.rank:
+            env = _Envelope("eager", wire.Ctl(
+                wire.FIN_EAGER, src=self.rank, tag=tag, seq=0,
+                nbytes=payload.size, dtype_id=dtype_id), payload)
+            self._route_envelope(env)
+            req._complete(nbytes=payload.size)
+            return req
+        mseq = self._mseq_tx.get(dest, 0)
+        self._mseq_tx[dest] = mseq + 1
+        use_rdv = (dtype_id != wire.NO_DTYPE
+                   and payload.size >= self.p.eager_threshold)
+        if use_rdv:
+            self._start_rdv_send(req, dest, payload, dtype_id, tag, mseq)
+        else:
+            assert payload.size <= self.p.eager_slot_bytes, (
+                f"eager message of {payload.size}B exceeds the "
+                f"{self.p.eager_slot_bytes}B staging slot — register the "
+                f"datatype for rendezvous or raise eager_slot_bytes")
+            seq = self._eager_seq.get(dest, 0)
+            self._eager_seq[dest] = seq + 1
+            self._eager_queue.setdefault(dest, deque()).append(dict(
+                req=req, dest=dest, seq=seq, payload=payload,
+                dtype_id=dtype_id, tag=tag, mseq=mseq))
+        return req
+
+    def irecv(self, buf: np.ndarray, source: int = ANY_SOURCE,
+              tag: int = ANY_TAG) -> Request:
+        assert source == ANY_SOURCE or 0 <= source < self.p.n_ranks
+        req = Request("recv", buf=buf, source=source, tag=tag)
+        env = self._match_unexpected(source, tag)
+        if env is None:
+            self._posted.append(req)
+        elif env.kind == "eager":
+            self._deliver_eager(req, env.ctl, env.payload)
+        else:
+            self._grant_rdv(req, env.ctl)
+        return req
+
+    @property
+    def done(self) -> bool:
+        return not (any(self._eager_queue.values())
+                    or any(self._eager_inflight.values())
+                    or self._rdv_sends or self._active
+                    or self._cts_waiting or not self.ctl.idle)
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.errors)
+
+    # -------------------------------------------------------- fabric hooks
+    def poll(self, now: int) -> List[np.ndarray]:
+        self._now = now
+        out: List[np.ndarray] = []
+        # start eligible queued eager sends (per-destination slot gating:
+        # seq's staging slot must be free, i.e. seq - slots_per_src FINed)
+        for dest, queue in self._eager_queue.items():
+            inflight = self._eager_inflight.setdefault(dest, {})
+            while queue:
+                ent = queue[0]
+                slot_key = (dest, ent["seq"] % self.p.eager_slots_per_src)
+                if (len(inflight) >= self.p.eager_slots_per_src
+                        or ent["seq"] - self.p.eager_slots_per_src
+                        in inflight
+                        or now < self._eager_cooldown.get(slot_key, 0)):
+                    break
+                queue.popleft()
+                inflight[ent["seq"]] = ent
+                self._launch_eager(ent)
+        # rendezvous grants waiting for a receive slot
+        while self._cts_waiting and self._slot_available():
+            req, ctl = self._cts_waiting.popleft()
+            self._grant_rdv(req, ctl)
+        # drive the SLMP data senders
+        for ent in list(self._active):
+            sender: slmp.SlmpSender = ent["sender"]
+            out.extend(sender.poll(now))
+            if sender.failed:
+                self._active.remove(ent)
+                msg = (f"rank{self.rank}: SLMP data to rank {ent['dest']} "
+                       f"exhausted retries (msg_id={ent['msg_id']:#x})")
+                self.errors.append(msg)
+                ent["req"]._complete(error=msg)
+            elif sender.done:
+                self._active.remove(ent)
+                self.stats["retransmits"] += sender.retransmits
+                ent["on_done"]()
+        out.extend(self.ctl.poll(now))
+        return out
+
+    def on_host_frames(self, frames: List[np.ndarray], now: int) -> None:
+        self._now = now
+        for f in frames:
+            if len(f) < pkt.SLMP_BASE:
+                continue
+            if wire.frame_dport(f) == wire.CTRL_PORT:
+                self.ctl.on_frame(f, now)
+                continue
+            ack = wire.parse_slmp_ack(f)
+            if ack is None:
+                continue
+            msg_id, off, peer_mac = ack
+            for ent in self._active:
+                if (ent["msg_id"] == msg_id
+                        and self.p.macs[ent["dest"]] == peer_mac):
+                    ent["sender"].on_ack(msg_id, off)
+                    break
+
+    def snapshot(self) -> dict:
+        raise NotImplementedError(
+            "MpiHostEngine does not support fabric checkpointing yet")
+
+    # ---------------------------------------------------------- send paths
+    def _slmp_cfg(self, dest: int, port: int) -> slmp.SlmpSenderConfig:
+        return slmp.SlmpSenderConfig(
+            window=self.p.slmp_window, mtu_payload=self.p.mtu_payload,
+            timeout=self.p.slmp_timeout,
+            max_retries=self.p.slmp_max_retries, port=port,
+            src_mac=self.p.macs[self.rank], dst_mac=self.p.macs[dest])
+
+    def _launch_eager(self, ent: dict) -> None:
+        dest, seq = ent["dest"], ent["seq"]
+        slot = self.rank * self.p.eager_slots_per_src \
+            + seq % self.p.eager_slots_per_src
+        msg_id = wire.pack_msg_id(wire.MPI_KIND_EAGER, 0, slot)
+        sender = slmp.SlmpSender(ent["payload"], msg_id,
+                                 self._slmp_cfg(dest, wire.EAGER_PORT))
+        self.stats["eager_sent"] += 1
+
+        def on_done():
+            fin = wire.Ctl(wire.FIN_EAGER, src=self.rank, tag=ent["tag"],
+                           seq=seq, nbytes=ent["payload"].size,
+                           dtype_id=ent["dtype_id"], slot=slot,
+                           mseq=ent["mseq"])
+
+            def on_acked():
+                self._eager_inflight[dest].pop(seq, None)
+                self._eager_cooldown[
+                    (dest, seq % self.p.eager_slots_per_src)] = \
+                    self._now + self.p.slot_quarantine
+                ent["req"]._complete(nbytes=ent["payload"].size)
+
+            self.ctl.send(dest, fin, on_acked=on_acked)
+
+        self._active.append(dict(sender=sender, dest=dest, msg_id=msg_id,
+                                 req=ent["req"], on_done=on_done))
+
+    def _start_rdv_send(self, req: Request, dest: int, payload: np.ndarray,
+                        dtype_id: int, tag: int, mseq: int) -> None:
+        seq = self._msg_seq.get(dest, 0)
+        self._msg_seq[dest] = seq + 1
+        self._rdv_sends[(dest, seq)] = dict(
+            req=req, dest=dest, seq=seq, payload=payload,
+            dtype_id=dtype_id, tag=tag)
+        self.stats["rdv_sent"] += 1
+        self.ctl.send(dest, wire.Ctl(wire.RTS, src=self.rank, tag=tag,
+                                     seq=seq, nbytes=payload.size,
+                                     dtype_id=dtype_id, mseq=mseq))
+
+    def _on_cts(self, ctl: wire.Ctl) -> None:
+        ent = self._rdv_sends.pop((ctl.src, ctl.seq), None)
+        if ent is None:
+            return                              # stale duplicate
+        msg_id = wire.pack_msg_id(wire.MPI_KIND_RDV, ent["dtype_id"],
+                                  ctl.slot)
+        sender = slmp.SlmpSender(ent["payload"], msg_id,
+                                 self._slmp_cfg(ent["dest"], wire.DATA_PORT))
+
+        def on_done():
+            fin = wire.Ctl(wire.FIN_RDV, src=self.rank, tag=ent["tag"],
+                           seq=ent["seq"], nbytes=ent["payload"].size,
+                           dtype_id=ent["dtype_id"], slot=ctl.slot)
+            self.ctl.send(ent["dest"], fin, on_acked=lambda: ent["req"]
+                          ._complete(nbytes=ent["payload"].size))
+
+        self._active.append(dict(sender=sender, dest=ent["dest"],
+                                 msg_id=msg_id, req=ent["req"],
+                                 on_done=on_done))
+
+    # ------------------------------------------------------- receive paths
+    def _on_ctl_give_up(self, dst: int, body: wire.Ctl) -> None:
+        self.errors.append(
+            f"rank{self.rank}: control message kind={body.kind} to rank "
+            f"{dst} (tag={body.tag}, seq={body.seq}) exhausted "
+            f"{self.p.ctl_max_retries} retries")
+
+    def _on_ctl(self, ctl: wire.Ctl, now: int) -> None:
+        self._now = now
+        if ctl.kind == wire.CTS:
+            self._on_cts(ctl)
+        elif ctl.kind == wire.RTS:
+            self._enqueue_matching(_Envelope("rts", ctl))
+        elif ctl.kind == wire.FIN_EAGER:
+            slot = ctl.src * self.p.eager_slots_per_src \
+                + ctl.seq % self.p.eager_slots_per_src
+            base = self.p.eager_base + slot * self.p.eager_slot_bytes
+            payload = np.array(self._node.read_host(base, ctl.nbytes),
+                               np.uint8)
+            self._enqueue_matching(_Envelope("eager", ctl, payload))
+        elif ctl.kind == wire.FIN_RDV:
+            self._finish_rdv_recv(ctl)
+
+    def _enqueue_matching(self, env: _Envelope) -> None:
+        """Admit wire envelopes to tag matching in per-sender send order
+        (mseq) — MPI's non-overtaking guarantee.  An envelope whose
+        predecessors have not arrived waits here."""
+        src = env.ctl.src
+        pending = self._mseq_pending.setdefault(src, {})
+        pending[env.ctl.mseq] = env
+        expected = self._mseq_rx.get(src, 0)
+        while expected in pending:
+            self._route_envelope(pending.pop(expected))
+            expected += 1
+        self._mseq_rx[src] = expected
+
+    def _route_envelope(self, env: _Envelope) -> None:
+        req = self._match_posted(env.ctl.src, env.ctl.tag)
+        if req is None:
+            self.stats["unexpected"] += 1
+            self._unexpected.append(env)
+        elif env.kind == "eager":
+            self._deliver_eager(req, env.ctl, env.payload)
+        else:
+            self._grant_rdv(req, env.ctl)
+
+    def _match_posted(self, src: int, tag: int) -> Optional[Request]:
+        for i, req in enumerate(self._posted):
+            if ((req.source in (ANY_SOURCE, src))
+                    and (req.tag in (ANY_TAG, tag))):
+                return self._posted.pop(i)
+        return None
+
+    def _match_unexpected(self, source: int, tag: int
+                          ) -> Optional[_Envelope]:
+        for i, env in enumerate(self._unexpected):
+            if ((source in (ANY_SOURCE, env.ctl.src))
+                    and (tag in (ANY_TAG, env.ctl.tag))):
+                del self._unexpected[i]
+                return env
+        return None
+
+    def _deliver_eager(self, req: Request, ctl: wire.Ctl,
+                       payload: np.ndarray) -> None:
+        view = _u8view(req.buf)
+        if ctl.dtype_id != wire.NO_DTYPE:
+            self.registry.unpack_into(ctl.dtype_id, payload, req.buf)
+        else:
+            assert view.size >= ctl.nbytes, (
+                f"recv buffer {view.size}B < message {ctl.nbytes}B")
+            view[:ctl.nbytes] = payload[:ctl.nbytes]
+        self.stats["bytes_recv"] += ctl.nbytes
+        req._complete(source=ctl.src, tag=ctl.tag, nbytes=ctl.nbytes)
+
+    # --- rendezvous receive
+    def _slot_available(self) -> bool:
+        while self._quarantine and \
+                self._now - self._quarantine[0][1] >= self.p.slot_quarantine:
+            self._free_slots.append(self._quarantine.popleft()[0])
+        return bool(self._free_slots)
+
+    def _grant_rdv(self, req: Request, ctl: wire.Ctl) -> None:
+        if not self._slot_available():
+            self._cts_waiting.append((req, ctl))
+            return
+        slot = self._free_slots.pop()
+        mem_bytes = self.registry.mem_bytes(ctl.dtype_id)
+        assert mem_bytes <= self.p.rdv_region_bytes
+        assert _u8view(req.buf).size >= mem_bytes, (
+            f"recv buffer {req.buf.size}B < datatype extent {mem_bytes}B")
+        self._rdv_recv[slot] = (req, ctl)
+        self.ctl.send(ctl.src, wire.Ctl(
+            wire.CTS, src=self.rank, tag=ctl.tag, seq=ctl.seq,
+            nbytes=ctl.nbytes, dtype_id=ctl.dtype_id, slot=slot))
+
+    def _finish_rdv_recv(self, fin: wire.Ctl) -> None:
+        entry = self._rdv_recv.pop(fin.slot, None)
+        if entry is None:
+            return                              # duplicate FIN
+        req, rts = entry
+        base = self.p.rdv_base + fin.slot * self.p.rdv_region_bytes
+        mem_bytes = self.registry.mem_bytes(rts.dtype_id)
+        window = np.array(self._node.read_host(base, mem_bytes), np.uint8)
+        mask = self.registry.mem_mask(rts.dtype_id)
+        view = _u8view(req.buf)
+        # the NIC already unpacked: copy only the bytes the datatype wrote
+        # (holes keep the receive buffer's existing contents — MPI unpack)
+        view[:mem_bytes][mask] = window[mask]
+        self._quarantine.append((fin.slot, self._now))
+        self.stats["bytes_recv"] += fin.nbytes
+        req._complete(source=rts.src, tag=rts.tag, nbytes=fin.nbytes)

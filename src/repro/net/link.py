@@ -52,12 +52,13 @@ class LinkState:
     lost: jax.Array        # () int32 — dropped by the loss process
     overflowed: jax.Array  # () int32 — dropped on buffer overflow
     duplicated: jax.Array  # () int32
+    reordered: jax.Array   # () int32 — packets given the reorder penalty
     delivered: jax.Array   # () int32
 
     def tree_flatten(self):
         return (self.data, self.length, self.deliver_at, self.occupied,
                 self.pushed, self.lost, self.overflowed, self.duplicated,
-                self.delivered), None
+                self.reordered, self.delivered), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -74,6 +75,7 @@ def make_state(capacity: int) -> LinkState:
         lost=jnp.zeros((), jnp.int32),
         overflowed=jnp.zeros((), jnp.int32),
         duplicated=jnp.zeros((), jnp.int32),
+        reordered=jnp.zeros((), jnp.int32),
         delivered=jnp.zeros((), jnp.int32),
     )
 
@@ -93,10 +95,10 @@ def _push(cfg: LinkConfig, state: LinkState, key: jax.Array,
     delay = jnp.asarray(cfg.latency, jnp.int32) + (
         jax.random.randint(k_jit, (2 * n,), 0, cfg.jitter + 1)
         if cfg.jitter > 0 else 0)
+    reo = jnp.zeros((2 * n,), bool)
     if cfg.reorder > 0.0:
-        delay = delay + jnp.where(
-            jax.random.uniform(k_reo, (2 * n,)) < cfg.reorder,
-            cfg.reorder_delay, 0)
+        reo = jax.random.uniform(k_reo, (2 * n,)) < cfg.reorder
+        delay = delay + jnp.where(reo, cfg.reorder_delay, 0)
     deliver_at = jnp.asarray(now, jnp.int32) + delay
 
     # scatter candidates into free slots (FIFO over the slot array)
@@ -123,6 +125,8 @@ def _push(cfg: LinkConfig, state: LinkState, key: jax.Array,
         overflowed=state.overflowed
         + (cand_valid & ~fits).sum().astype(jnp.int32),
         duplicated=state.duplicated + dup.sum().astype(jnp.int32),
+        reordered=state.reordered
+        + (cand_valid & reo).sum().astype(jnp.int32),
         delivered=state.delivered,
     )
 
@@ -163,4 +167,5 @@ class Link:
 
     def stats(self, state: LinkState) -> dict:
         return {k: int(getattr(state, k)) for k in
-                ("pushed", "lost", "overflowed", "duplicated", "delivered")}
+                ("pushed", "lost", "overflowed", "duplicated", "reordered",
+                 "delivered")}

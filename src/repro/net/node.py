@@ -165,17 +165,30 @@ class PingPongClient(HostEngine):
 
 
 class Node:
-    """One endpoint of the fabric: NIC + host engines + a MAC address."""
+    """One endpoint of the fabric: NIC + host engines + a MAC address.
+
+    Pass ``nic`` to share one :class:`SpinNIC` (and its jitted datapath)
+    between several nodes with identical contexts — a ``SpinNIC`` holds no
+    per-node mutable state, so an N-rank fabric compiles the step function
+    once instead of N times.  ``contexts``/``host_bytes``/``batch`` are
+    ignored when ``nic`` is given.
+    """
 
     def __init__(self, name: str, mac: bytes,
-                 contexts: Sequence, host_bytes: int = 1 << 20,
+                 contexts: Optional[Sequence] = None,
+                 host_bytes: int = 1 << 20,
                  batch: int = 32,
-                 engines: Sequence[HostEngine] = ()):
+                 engines: Sequence[HostEngine] = (),
+                 nic: Optional[spin_nic.SpinNIC] = None):
         self.name = name
         self.mac = bytes(mac)
-        self.nic = spin_nic.SpinNIC(list(contexts), host_bytes=host_bytes,
-                                    batch=batch)
-        self.batch = batch
+        if nic is None:
+            assert contexts is not None, "need contexts or a prebuilt nic"
+            nic = spin_nic.SpinNIC(list(contexts), host_bytes=host_bytes,
+                                   batch=batch)
+        self.nic = nic
+        contexts = nic.contexts
+        self.batch = nic.batch
         # any installed handler may push_counter; skip the per-tick FIFO
         # drain (a blocking device read) only when no context runs handlers
         # at all (null-context sender/client nodes — the hot-loop case)

@@ -100,6 +100,63 @@ def test_ddt_kernel_equals_numpy_pack(d, count):
 
 
 @settings(**SET)
+@given(st.integers(1, 5), st.integers(1, 6), st.integers(0, 6),
+       st.integers(1, 2), st.integers(0, 2**31 - 1))
+def test_ddt_overlapping_unpack_last_occurrence_wins(count, blocklen,
+                                                     stride, n, seed):
+    """When stride < blocklen the layout overlaps itself; MPI unpack
+    applies message bytes in serialization order, so the *last* occurrence
+    of each memory byte wins.  Also checks the deduplicated ("winner-only")
+    map the repro.mpi registry uploads to the NIC: applying only winner
+    bytes — in ANY order — must give the same result, which is what makes
+    the offloaded unpack immune to segment reordering/retransmission."""
+    d = ddtlib.Vector(count, blocklen, stride, ddtlib.MPI_BYTE)
+    c = ddtlib.commit(d, n)
+    rng = np.random.default_rng(seed)
+    msg = rng.integers(0, 256, c.msg_bytes).astype(np.uint8)
+    mem0 = np.full(max(c.mem_bytes, 1), 0x55, np.uint8)[:c.mem_bytes]
+    out = ddtlib.unpack_np(c, msg, mem0.copy())
+    # sequential byte-by-byte oracle
+    ref = mem0.copy()
+    for k in range(c.msg_bytes):
+        ref[c.msg_to_mem[k]] = msg[k]
+    np.testing.assert_array_equal(out, ref)
+    # winner-only map, applied in a random order
+    winner = c.mem_to_msg[c.msg_to_mem] == np.arange(c.msg_bytes)
+    ref2 = mem0.copy()
+    for k in rng.permutation(c.msg_bytes):
+        if winner[k]:
+            ref2[c.msg_to_mem[k]] = msg[k]
+    np.testing.assert_array_equal(ref2, out)
+    # every touched memory byte has exactly one winner
+    assert int(winner.sum()) == int((c.mem_to_msg >= 0).sum())
+
+
+@settings(**SET)
+@given(st.integers(0, 4), st.integers(0, 4), st.integers(0, 5),
+       st.integers(1, 3))
+def test_ddt_degenerate_vectors_commit_to_empty_maps(count, blocklen,
+                                                     stride, n):
+    """Zero-count / zero-blocklen constructors are legal MPI: they must
+    commit to empty index maps (no crash), pack to zero bytes, and unpack
+    as a no-op."""
+    zeros = [ddtlib.Vector(0, blocklen, stride, ddtlib.MPI_FLOAT),
+             ddtlib.Vector(count, 0, stride, ddtlib.MPI_FLOAT),
+             ddtlib.HVector(0, blocklen, 4 * stride, ddtlib.MPI_FLOAT),
+             ddtlib.HVector(count, 0, 4 * stride, ddtlib.MPI_FLOAT)]
+    for d in zeros:
+        c = ddtlib.commit(d, n)
+        assert c.msg_bytes == 0 and c.msg_to_mem.size == 0
+        assert d.size == 0
+        assert (c.mem_to_msg == -1).all()
+        mem = (np.arange(max(c.mem_bytes, 4)) % 256).astype(
+            np.uint8)[:c.mem_bytes]
+        assert ddtlib.pack_np(c, mem).size == 0
+        np.testing.assert_array_equal(
+            ddtlib.unpack_np(c, np.zeros(0, np.uint8), mem.copy()), mem)
+
+
+@settings(**SET)
 @given(st.integers(1, 5000), st.integers(1, 1400), st.integers(0, 2**28))
 def test_slmp_segmentation_covers_message(nbytes, payload, msg_id):
     msg = np.random.default_rng(nbytes).integers(
