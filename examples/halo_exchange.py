@@ -12,8 +12,13 @@ sweep exchanges the halo ring with the four neighbours:
     packed column straight into the ghost column of the field array
     (stride and all) by host-memory DMA — no host unpack.
 
-After each exchange every rank relaxes its interior; the distributed
-result is checked against a single-domain numpy reference every sweep.
+The sweep demonstrates *real* compute/communication overlap on the
+request layer: halos are posted nonblocking, the deep interior (which
+needs no ghost cells) relaxes while the fabric progresses under the
+modeled compute window, and only the boundary ring waits for the halo
+requests — the exposed communication is whatever retransmission tails
+poke out of the compute.  The distributed result is checked against a
+single-domain numpy reference every sweep.
 """
 import sys
 sys.path.insert(0, "src")
@@ -61,7 +66,7 @@ def main():
         the strided column lives inside it (vector datatype extent)."""
         return fields[r].reshape(-1)[row * (W + 2) + colidx:]
 
-    def exchange():
+    def post_halos():
         reqs = []
         for r in range(n):
             py, px = divmod(r, PX)
@@ -87,12 +92,49 @@ def main():
                                    tag=TAG_T))
             reqs.append(comm.isend(r, down, fields[r][H, 1:W + 1],
                                    tag=TAG_B))
-        comm.wait_list(reqs, max_ticks=300_000)
+        return reqs
 
+    def relax_deep(f):
+        """Jacobi update of the deep interior (rows/cols 2..H-1/2..W-1):
+        reads no ghost cell, so it runs while halos are still in flight."""
+        return 0.25 * (f[1:H - 1, 2:W] + f[3:H + 1, 2:W]
+                       + f[2:H, 1:W - 1] + f[2:H, 3:W + 1])
+
+    def relax_ring(f):
+        """Jacobi update of the boundary ring — the only cells that had to
+        wait for the halo exchange."""
+        row1 = 0.25 * (f[0, 1:W + 1] + f[2, 1:W + 1]
+                       + f[1, 0:W] + f[1, 2:W + 2])
+        rowH = 0.25 * (f[H - 1, 1:W + 1] + f[H + 1, 1:W + 1]
+                       + f[H, 0:W] + f[H, 2:W + 2])
+        col1 = 0.25 * (f[1:H - 1, 1] + f[3:H + 1, 1]
+                       + f[2:H, 0] + f[2:H, 2])
+        colW = 0.25 * (f[1:H - 1, W] + f[3:H + 1, W]
+                       + f[2:H, W - 1] + f[2:H, W + 1])
+        return row1, rowH, col1, colW
+
+    COMPUTE_TICKS = 48       # the modeled cost of the deep-interior sweep
+    hidden_total = exposed_total = 0
     for sweep in range(sweeps):
         t0 = comm.now
-        exchange()
+        reqs = post_halos()
+        # --- overlap window: deep interior relaxes from OLD values while
+        # the fabric makes progress underneath the compute; test() polls
+        # without blocking to spot when the exchange finished under it
+        deep = [relax_deep(fields[r]) for r in range(n)]
+        done_at = None
+        for _ in range(COMPUTE_TICKS // 4):
+            comm.progress(4)
+            if done_at is None and comm.test(*reqs):
+                done_at = comm.now - t0
+        # --- exposed tail: only the boundary ring still needs the ghosts
+        if not comm.test(*reqs):
+            comm.wait_list(reqs, max_ticks=300_000)
+            done_at = comm.now - t0
         ticks = comm.now - t0
+        t_exposed = max(0, done_at - COMPUTE_TICKS)
+        hidden_total += done_at - t_exposed
+        exposed_total += t_exposed
         # verify every exchanged ghost cell against the periodic global
         # reference (corners are not exchanged — a 5-point stencil never
         # reads them)
@@ -105,18 +147,26 @@ def main():
             mask = np.ones_like(got, bool)
             mask[0, 0] = mask[0, -1] = mask[-1, 0] = mask[-1, -1] = False
             np.testing.assert_allclose(got[mask], want[mask], rtol=1e-6)
-        # Jacobi relaxation on the interior, and on the reference domain
+        # ring update (fresh ghosts + old interior), then commit both
         for r in range(n):
             f = fields[r]
-            f[1:-1, 1:-1] = 0.25 * (f[:-2, 1:-1] + f[2:, 1:-1]
-                                    + f[1:-1, :-2] + f[1:-1, 2:])
+            row1, rowH, col1, colW = relax_ring(f)
+            f[2:H, 2:W] = deep[r]
+            f[1, 1:W + 1] = row1
+            f[H, 1:W + 1] = rowH
+            f[2:H, 1] = col1
+            f[2:H, W] = colW
         G = 0.25 * (np.roll(G, 1, 0) + np.roll(G, -1, 0)
                     + np.roll(G, 1, 1) + np.roll(G, -1, 1))
         retx = sum(s["retransmits"] for s in comm.stats())
         print(f"sweep {sweep}: halo exchange ok in {ticks} ticks "
-              f"(cumulative retransmits {retx})")
+              f"({t_exposed} exposed beyond the compute window, "
+              f"cumulative retransmits {retx})")
     lost = sum(l["lost"] for l in comm.link_stats())
-    print(f"halo_exchange OK — {sweeps} verified sweeps, "
+    R = hidden_total / max(1, hidden_total + exposed_total)
+    print(f"halo_exchange OK — {sweeps} verified sweeps, overlap "
+          f"R={R:.3f} ({exposed_total} of {hidden_total + exposed_total} "
+          f"exchange ticks exposed), "
           f"{lost} frames lost on the wire and recovered")
 
 

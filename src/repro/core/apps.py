@@ -157,6 +157,12 @@ MPI_MSGID_DTYPE_SHIFT = 16
 MPI_MSGID_DTYPE_MASK = 0xFF
 MPI_MSGID_SLOT_MASK = 0xFFFF
 
+# How many times each MPI NIC context (and its device tables) has been
+# built this job.  A context build uploads the committed index maps to the
+# device, so regression tests assert this stays flat when a second
+# communicator reuses the same datatype tables (the repro.mpi NIC cache).
+MPI_CONTEXT_BUILDS = dict(eager=0, ddt=0)
+
 
 def make_mpi_eager_context(port: int, n_slots: int, slot_bytes: int,
                            host_base: int = 0) -> H.ExecutionContext:
@@ -165,6 +171,7 @@ def make_mpi_eager_context(port: int, n_slots: int, slot_bytes: int,
     the host matches tags and copies out after the sender's FIN.  The NIC
     does reassembly + per-packet ACK; the host never touches a wire frame.
     """
+    MPI_CONTEXT_BUILDS["eager"] += 1
 
     def eager_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
         out = H.none_out()
@@ -194,6 +201,7 @@ def make_mpi_ddt_context(maps, msg_lens, region_bytes: int, n_slots: int,
     ``maps``: (D, Mmax) int32, msg→mem byte map per datatype, -1-padded;
     ``msg_lens``: (D,) int32 serialized size per datatype.
     """
+    MPI_CONTEXT_BUILDS["ddt"] += 1
     maps = jnp.asarray(maps, jnp.int32)
     msg_lens = jnp.asarray(msg_lens, jnp.int32)
     n_types, max_msg = maps.shape

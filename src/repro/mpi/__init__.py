@@ -3,10 +3,12 @@ receive-side datatype processing offloaded to the SpinNIC (paper §V-C as a
 real multi-node experiment).
 
   wire.py          envelopes, msg_id packing, reliable control datagrams
-  datatypes.py     committed-datatype registry (dataloop commit + tables)
-  engine.py        per-rank host engine: tag matching, eager/rendezvous
-  communicator.py  ranks ↔ fabric nodes, requests, progress
-  collectives.py   bcast / reduce / allreduce / alltoall(v) / barrier
+  datatypes.py     committed-datatype registry (job-wide commit cache)
+  engine.py        per-rank host engine: tag matching, eager/rendezvous,
+                   closure-free checkpointable protocol state
+  communicator.py  ranks ↔ fabric nodes, requests, progress, checkpoint
+  collectives.py   nonblocking plan-based collectives: binomial trees,
+                   recursive-doubling allreduce, Bruck alltoall(v)
 
 Quick taste::
 
@@ -18,16 +20,28 @@ Quick taste::
     comm = mpi.Communicator(4, registry=reg)
     r = comm.irecv(1, buf, source=mpi.ANY_SOURCE, tag=7)
     s = comm.isend(0, 1, data, tag=7, datatype=col)   # NIC unpacks
-    comm.wait(r, s)
+    h = mpi.iallreduce(comm, vals)                    # log-step plan
+    while not h.test():
+        compute_something(); comm.progress()          # real overlap
+    comm.waitall([r, s, h])
 """
-from repro.mpi.collectives import (allreduce, alltoall, alltoallv, barrier,
-                                   bcast, reduce)
-from repro.mpi.communicator import Communicator, MpiConfig
-from repro.mpi.datatypes import DatatypeRegistry
+from repro.mpi.collectives import (ALLREDUCE_RD_MAX_BYTES,
+                                   ALLTOALL_BRUCK_MAX_BLOCK, CollRequest,
+                                   allreduce, alltoall, alltoallv, barrier,
+                                   bcast, iallreduce, ialltoall, ialltoallv,
+                                   ibarrier, ibcast, ireduce, reduce)
+from repro.mpi.communicator import (COLL_TAG_BASE, BufferPool, Communicator,
+                                    MpiConfig, clear_nic_cache)
+from repro.mpi.datatypes import (COMMIT_COUNTERS, DatatypeRegistry,
+                                 clear_commit_cache)
 from repro.mpi.engine import ANY_SOURCE, ANY_TAG, MpiHostEngine, Request
 from repro.mpi.wire import CTRL_PORT, DATA_PORT, EAGER_PORT
 
 __all__ = ["Communicator", "MpiConfig", "DatatypeRegistry", "MpiHostEngine",
-           "Request", "ANY_SOURCE", "ANY_TAG", "bcast", "reduce",
-           "allreduce", "alltoall", "alltoallv", "barrier",
+           "Request", "CollRequest", "BufferPool", "ANY_SOURCE", "ANY_TAG",
+           "bcast", "reduce", "allreduce", "alltoall", "alltoallv",
+           "barrier", "ibcast", "ireduce", "iallreduce", "ialltoall",
+           "ialltoallv", "ibarrier", "COLL_TAG_BASE",
+           "ALLREDUCE_RD_MAX_BYTES", "ALLTOALL_BRUCK_MAX_BLOCK",
+           "COMMIT_COUNTERS", "clear_commit_cache", "clear_nic_cache",
            "EAGER_PORT", "DATA_PORT", "CTRL_PORT"]

@@ -4,17 +4,29 @@ Builds one shared :class:`~repro.core.spin_nic.SpinNIC` (every rank runs
 identical execution contexts — eager staging + DDT-unpack offload — so the
 jitted datapath compiles once for the whole job), wires one
 :class:`MpiHostEngine` per rank into a :class:`~repro.net.fabric.Fabric`,
-and maps rank *i* to MAC ``node_mac(i)``.
+and maps rank *i* to MAC ``node_mac(i)``.  NICs are cached job-wide by
+(table digest, geometry): a second communicator over the same committed
+datatypes reuses the compiled datapath and its uploaded index maps
+instead of rebuilding them.
 
 Progress is explicit, like any discrete-event co-simulation: nonblocking
-``isend``/``irecv`` return :class:`Request` handles, and :meth:`wait` /
-:meth:`run_until` tick the fabric until they complete.  The blocking
-``send``/``recv`` wrappers do the ticking themselves.
+``isend``/``irecv`` return :class:`Request` handles with ``test``/``wait``,
+and :meth:`wait` / :meth:`waitall` / :meth:`run_until` tick the fabric
+until they complete.  The blocking ``send``/``recv`` wrappers do the
+ticking themselves.  Nonblocking collectives register *plans*
+(:mod:`repro.mpi.collectives`) whose reactive state rides the same
+request layer.
+
+The whole MPI state — fabric, NIC windows, engines mid-protocol, buffer
+pool, and active collective plans — is captured by :meth:`checkpoint` and
+revived by :meth:`restore`, which accepts a snapshot taken from a
+*different* communicator object (same shape) and returns fresh handles
+for the collectives that were in flight.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -26,6 +38,12 @@ from repro.mpi.datatypes import DatatypeRegistry
 from repro.mpi.engine import (ANY_SOURCE, ANY_TAG, MpiHostEngine, MpiParams,
                               Request)
 from repro.net import Fabric, LinkConfig, Node
+
+# Collectives reserve tags at/above this — keep user tags below it.  Each
+# plan owns a block of _PLAN_TAG_SPAN tags (one per algorithm round).
+COLL_TAG_BASE = 1 << 20
+_PLAN_TAG_SPAN = 256
+_PLAN_TAG_SLOTS = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +64,56 @@ class MpiConfig:
     batch: int = 16                  # NIC ingress batch per tick
 
 
+class BufferPool:
+    """Identity-preserving buffer registry for checkpointable state.
+
+    Collective plans and posted receives reference numpy buffers by id;
+    a snapshot stores one copy per id and a restore rebinds every
+    reference to the same fresh array — aliasing (a plan reading the
+    buffer an in-flight receive will write) survives the round trip.
+    """
+
+    def __init__(self):
+        self._bufs: Dict[int, np.ndarray] = {}
+        self._next = 0
+
+    def adopt(self, arr: np.ndarray) -> int:
+        """Register ``arr`` (stored by reference, not copied)."""
+        bid = self._next
+        self._next += 1
+        self._bufs[bid] = arr
+        return bid
+
+    def get(self, bid: int) -> np.ndarray:
+        return self._bufs[bid]
+
+    def has(self, bid: int) -> bool:
+        return bid in self._bufs
+
+    def release(self, bid: int) -> None:
+        self._bufs.pop(bid, None)
+
+    def snapshot(self) -> dict:
+        return dict(next=self._next,
+                    bufs=[(bid, np.array(a))
+                          for bid, a in self._bufs.items()])
+
+    def restore(self, snap: dict) -> None:
+        self._next = snap["next"]
+        self._bufs = {bid: np.array(a) for bid, a in snap["bufs"]}
+
+
+# Job-wide NIC cache: a SpinNIC holds no per-node mutable state (NICState
+# lives in the Node), so communicators with identical context geometry
+# and datatype tables share one compiled datapath — and the device index
+# maps upload once per job (apps.MPI_CONTEXT_BUILDS stays flat).
+_NIC_CACHE: Dict[tuple, spin_nic.SpinNIC] = {}
+
+
+def clear_nic_cache() -> None:
+    _NIC_CACHE.clear()
+
+
 class Communicator:
     def __init__(self, n_ranks: int,
                  registry: Optional[DatatypeRegistry] = None,
@@ -63,17 +131,29 @@ class Communicator:
         eager_total = n_ranks * cfg.eager_slots_per_src \
             * cfg.eager_slot_bytes
         rdv_region = max(8, -(-self.registry.max_mem_bytes // 8) * 8)
-        contexts = [apps.make_mpi_eager_context(
-            wire.EAGER_PORT,
-            n_slots=n_ranks * cfg.eager_slots_per_src,
-            slot_bytes=cfg.eager_slot_bytes, host_base=0)]
+        host_bytes = eager_total + cfg.n_rdv_slots * rdv_region
+
+        maps = lens = None
         if len(self.registry):
             maps, lens = self.registry.tables()
-            contexts.append(apps.make_mpi_ddt_context(
-                maps, lens, region_bytes=rdv_region,
-                n_slots=cfg.n_rdv_slots, port=wire.DATA_PORT,
-                host_base=eager_total))
-        host_bytes = eager_total + cfg.n_rdv_slots * rdv_region
+        nic_key = (n_ranks, cfg.eager_slots_per_src, cfg.eager_slot_bytes,
+                   cfg.n_rdv_slots, cfg.batch, rdv_region, host_bytes,
+                   None if maps is None else
+                   (maps.tobytes(), lens.tobytes()))
+        nic = _NIC_CACHE.get(nic_key)
+        if nic is None:
+            contexts = [apps.make_mpi_eager_context(
+                wire.EAGER_PORT,
+                n_slots=n_ranks * cfg.eager_slots_per_src,
+                slot_bytes=cfg.eager_slot_bytes, host_base=0)]
+            if maps is not None:
+                contexts.append(apps.make_mpi_ddt_context(
+                    maps, lens, region_bytes=rdv_region,
+                    n_slots=cfg.n_rdv_slots, port=wire.DATA_PORT,
+                    host_base=eager_total))
+            nic = spin_nic.SpinNIC(contexts, host_bytes=host_bytes,
+                                   batch=cfg.batch)
+            _NIC_CACHE[nic_key] = nic
 
         self.params = MpiParams(
             n_ranks=n_ranks, macs=macs,
@@ -89,12 +169,15 @@ class Communicator:
             ctl_max_retries=cfg.ctl_max_retries)
 
         # one NIC (and one compiled datapath) shared by every rank
-        self.nic = spin_nic.SpinNIC(contexts, host_bytes=host_bytes,
-                                    batch=cfg.batch)
+        self.nic = nic
+        self.pool = BufferPool()
+        self._plans: Dict[int, "object"] = {}
+        self._next_plan_id = 0
         self.engines: List[MpiHostEngine] = []
         self.nodes: List[Node] = []
         for r in range(n_ranks):
-            engine = MpiHostEngine(r, self.registry, self.params)
+            engine = MpiHostEngine(r, self.registry, self.params,
+                                   pool=self.pool)
             node = Node(f"rank{r}", macs[r], nic=self.nic,
                         engines=[engine])
             engine.attach(node)
@@ -120,9 +203,13 @@ class Communicator:
             self.link_cfgs = None
         if link_cfgs is not None:
             self.link_cfgs = list(link_cfgs)
+        self.pool = BufferPool()
+        self._plans = {}
+        self._next_plan_id = 0
         self.engines = []
         for r, node in enumerate(self.nodes):
-            engine = MpiHostEngine(r, self.registry, self.params)
+            engine = MpiHostEngine(r, self.registry, self.params,
+                                   pool=self.pool)
             node.reset(engines=[engine])
             engine.attach(node)
             self.engines.append(engine)
@@ -135,12 +222,17 @@ class Communicator:
     # ------------------------------------------------------- point-to-point
     def isend(self, src: int, dest: int, data: np.ndarray, tag: int = 0,
               datatype=None) -> Request:
-        return self.engines[src].isend(dest, data, tag=tag,
-                                       datatype=datatype)
+        req = self.engines[src].isend(dest, data, tag=tag,
+                                      datatype=datatype)
+        req._comm = self
+        return req
 
     def irecv(self, rank: int, buf: np.ndarray, source: int = ANY_SOURCE,
-              tag: int = ANY_TAG) -> Request:
-        return self.engines[rank].irecv(buf, source=source, tag=tag)
+              tag: int = ANY_TAG, buf_id: Optional[int] = None) -> Request:
+        req = self.engines[rank].irecv(buf, source=source, tag=tag,
+                                       buf_id=buf_id)
+        req._comm = self
+        return req
 
     def send(self, src: int, dest: int, data: np.ndarray, tag: int = 0,
              datatype=None, max_ticks: int = 100_000) -> Request:
@@ -177,11 +269,15 @@ class Communicator:
                     raise RuntimeError("; ".join(e.errors))
         return self.fabric.now - t0
 
-    def wait(self, *reqs: Request, max_ticks: int = 100_000) -> int:
-        return self.wait_list(list(reqs), max_ticks=max_ticks)
+    def test(self, *reqs: Request) -> bool:
+        """MPI_Testall: True iff every request is complete.  Never ticks."""
+        return all(r.done for r in reqs)
 
-    def wait_list(self, reqs: List[Request],
-                  max_ticks: int = 100_000) -> int:
+    def wait(self, *reqs: Request, max_ticks: int = 100_000) -> int:
+        return self.waitall(list(reqs), max_ticks=max_ticks)
+
+    def waitall(self, reqs: List[Request],
+                max_ticks: int = 100_000) -> int:
         """Wait on a (possibly growing) list of requests — collective
         algorithms append follow-on requests from completion callbacks."""
         ticks = self.run_until(lambda: all(r.done for r in reqs),
@@ -191,9 +287,68 @@ class Communicator:
             raise RuntimeError("; ".join(errs))
         return ticks
 
+    # kept as an alias — collective plans and older call sites use it
+    wait_list = waitall
+
+    # ------------------------------------------------------ collective plans
+    def _new_plan_slot(self):
+        pid = self._next_plan_id
+        self._next_plan_id += 1
+        tag_base = COLL_TAG_BASE \
+            + (pid % _PLAN_TAG_SLOTS) * _PLAN_TAG_SPAN
+        return pid, tag_base
+
+    def _register_plan(self, pid: int, plan) -> None:
+        self._plans[pid] = plan
+
+    def _unregister_plan(self, pid: int) -> None:
+        self._plans.pop(pid, None)
+
     # --------------------------------------------------------- observability
     def stats(self) -> List[dict]:
         return [dict(e.stats) for e in self.engines]
 
     def link_stats(self) -> List[dict]:
         return self.fabric.link_stats()
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self) -> dict:
+        """Snapshot the whole MPI state: fabric (links, NIC windows, clock,
+        PRNG) via its existing checkpoint path — which recurses into every
+        engine's closure-free snapshot — plus the buffer pool and every
+        active collective plan.  Read-only: the live run is unperturbed."""
+        return dict(
+            fabric=self.fabric.checkpoint(),
+            pool=self.pool.snapshot(),
+            plans=[(pid, p.snapshot()) for pid, p in self._plans.items()],
+            next_plan_id=self._next_plan_id,
+        )
+
+    def restore(self, snap: dict) -> Dict[int, Request]:
+        """Revive a checkpoint into *this* communicator (freshly built with
+        the same shape, or the original).  Returns fresh collective handles
+        keyed by plan id — the collectives that were in flight at snapshot
+        time complete on these."""
+        from repro.mpi import collectives as coll   # avoid import cycle
+        self.pool.restore(snap["pool"])
+        self.fabric.restore(snap["fabric"])
+        self._next_plan_id = snap["next_plan_id"]
+        self._plans = {}
+        handles: Dict[int, Request] = {}
+        for pid, ps in snap["plans"]:
+            plan = coll.PLAN_TYPES[ps["name"]].from_snapshot(self, pid, ps)
+            self._plans[pid] = plan
+            handles[pid] = plan.request
+        # re-attach plan completion callbacks to the live requests the
+        # engine snapshots revived (matched by collective token)
+        for e in self.engines:
+            for req in list(e._reqs.values()):
+                req._comm = self
+                if req.ctoken is None:
+                    continue
+                pid, key = req.ctoken
+                plan = self._plans.get(pid)
+                if plan is not None:
+                    req.add_done_callback(
+                        lambda q, plan=plan, key=key: plan._step(key, q))
+        return handles

@@ -15,13 +15,42 @@ back to host unpack — the comparison baseline for the offload benchmark.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import ddt as ddtlib
 
 DTypeLike = Union[int, ddtlib.DDT, Tuple[ddtlib.DDT, int]]
+
+# Job-wide commit cache: committing a datatype (dataloop flatten -> byte
+# index maps) is pure in (ddt, count), and DDT constructors are frozen
+# dataclasses, so one commit per distinct pair serves every registry in
+# the process.  Two communicators registering the same (ddt, count) share
+# one CommittedDDT — the NIC index map is built once per job, not once
+# per registry.  CommittedDDT arrays are treated as immutable.
+_COMMIT_CACHE: Dict[Tuple[ddtlib.DDT, int], ddtlib.CommittedDDT] = {}
+COMMIT_COUNTERS = dict(commits=0, hits=0)
+
+
+def cached_commit(ddt: ddtlib.DDT, count: int) -> ddtlib.CommittedDDT:
+    """Commit ``count`` instances of ``ddt``, memoized per job."""
+    key = (ddt, count)
+    c = _COMMIT_CACHE.get(key)
+    if c is None:
+        COMMIT_COUNTERS["commits"] += 1
+        c = ddtlib.commit(ddt, count)
+        _COMMIT_CACHE[key] = c
+    else:
+        COMMIT_COUNTERS["hits"] += 1
+    return c
+
+
+def clear_commit_cache() -> None:
+    """Testing hook: drop the job-wide cache and zero the counters."""
+    _COMMIT_CACHE.clear()
+    COMMIT_COUNTERS["commits"] = 0
+    COMMIT_COUNTERS["hits"] = 0
 
 
 class DatatypeRegistry:
@@ -38,7 +67,7 @@ class DatatypeRegistry:
         """Commit ``count`` instances of ``ddt``; returns the dtype id."""
         assert not self._frozen, \
             "registry is frozen (a Communicator was already built on it)"
-        c = ddtlib.commit(ddt, count)
+        c = cached_commit(ddt, count)
         assert c.msg_bytes > 0, "cannot register an empty datatype"
         self._committed.append(c)
         self._names.append(name or f"dtype{len(self._committed) - 1}")

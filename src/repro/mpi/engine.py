@@ -22,6 +22,16 @@ and implements the host half of the messaging layer:
 All control traffic uses the reliable :class:`~repro.mpi.wire.CtlEndpoint`;
 all bulk data uses SLMP retransmission — the whole layer survives loss,
 duplication and reordering.
+
+**Checkpointing.** Every continuation in the engine is a plain-data
+record, never a closure: send-side transfers carry their protocol fields
+in the in-flight entry and are finished by :meth:`_sender_done`; control
+acks dispatch serializable tokens through :meth:`_on_tok_acked`; live
+:class:`Request` handles are tracked by integer id in a registry.  That
+makes :meth:`snapshot` / :meth:`restore` total — an engine checkpointed
+mid-collective restores into a fresh object graph and continues
+bit-identically (the fabric's :meth:`~repro.net.fabric.Fabric.checkpoint`
+path calls straight into these).
 """
 from __future__ import annotations
 
@@ -64,20 +74,42 @@ class MpiParams:
 
 
 class Request:
-    """Nonblocking operation handle (MPI_Request).  ``done`` flips when the
-    operation completes; for receives, ``source``/``tag``/``nbytes`` then
-    report the matched envelope (MPI_Status)."""
+    """Nonblocking operation handle (MPI_Request).
+
+    ``test()`` probes completion without ticking the fabric; ``wait()``
+    drives the owning communicator until done.  For receives,
+    ``source``/``tag``/``nbytes`` report the matched envelope (MPI_Status)
+    after completion.  ``rid`` is the engine-local id live requests are
+    checkpointed under; ``ctoken`` names the collective-plan step this
+    request belongs to (plain data — restored plans re-attach their
+    callbacks by token).
+    """
 
     def __init__(self, kind: str, buf: Optional[np.ndarray] = None,
                  source: int = ANY_SOURCE, tag: int = ANY_TAG):
-        self.kind = kind                  # "send" | "recv"
+        self.kind = kind                  # "send" | "recv" | "coll"
         self.buf = buf
+        self.buf_id: Optional[int] = None  # BufferPool binding (checkpoint)
         self.source = source              # recv: match filter, then sender
         self.tag = tag
         self.done = False
         self.error: Optional[str] = None
         self.nbytes = 0
+        self.rid = -1
+        self.ctoken: Optional[tuple] = None  # (plan_id, step_key)
+        self._comm = None                 # set by the Communicator
         self._cbs: List[Callable[["Request"], None]] = []
+
+    def test(self) -> bool:
+        """MPI_Test: completion probe — never blocks, never ticks."""
+        return self.done
+
+    def wait(self, max_ticks: int = 100_000) -> "Request":
+        """MPI_Wait: tick the owning communicator until complete."""
+        assert self._comm is not None, \
+            "request has no communicator: use comm.wait(req)"
+        self._comm.wait(self, max_ticks=max_ticks)
+        return self
 
     def add_done_callback(self, cb: Callable[["Request"], None]) -> None:
         if self.done:
@@ -120,20 +152,37 @@ def _u8view(buf: np.ndarray) -> np.ndarray:
     return buf.reshape(-1).view(np.uint8)
 
 
+def _env_snap(e: _Envelope) -> tuple:
+    return (e.kind, dataclasses.astuple(e.ctl),
+            None if e.payload is None else e.payload.copy())
+
+
+def _env_restore(t: tuple) -> _Envelope:
+    kind, ctl, payload = t
+    return _Envelope(kind, wire.Ctl(*ctl),
+                     None if payload is None else payload.copy())
+
+
 class MpiHostEngine(HostEngine):
     def __init__(self, rank: int, registry: DatatypeRegistry,
-                 params: MpiParams):
+                 params: MpiParams, pool=None):
         self.rank = rank
         self.registry = registry
         self.p = params
+        self.pool = pool                        # BufferPool (checkpointing)
         self._node = None                       # set by attach()
         self.ctl = wire.CtlEndpoint(rank, list(params.macs),
                                     timeout=params.ctl_timeout,
                                     max_retries=params.ctl_max_retries)
         self.ctl.deliver = self._on_ctl
+        self.ctl.on_acked = self._on_tok_acked
         self.ctl.on_give_up = self._on_ctl_give_up
         self._now = 0
-        # ---- send side
+        # ---- request registry (live, incomplete requests by id)
+        self._reqs: Dict[int, Request] = {}
+        self._next_rid = 0
+        # ---- send side.  Entries are plain-data dicts carrying every
+        # field their continuation needs (no closures anywhere).
         self._eager_seq: Dict[int, int] = {}
         self._msg_seq: Dict[int, int] = {}
         self._mseq_tx: Dict[int, int] = {}      # matching seq per dest
@@ -154,10 +203,10 @@ class MpiHostEngine(HostEngine):
         # earlier eager message's FIN onto the wire
         self._mseq_rx: Dict[int, int] = {}
         self._mseq_pending: Dict[int, Dict[int, _Envelope]] = {}
-        self._rdv_recv: Dict[int, Tuple[Request, wire.Ctl]] = {}
+        self._rdv_recv: Dict[int, Tuple[int, wire.Ctl]] = {}   # slot -> rid
         self._free_slots: List[int] = list(range(params.n_rdv_slots))
         self._quarantine: Deque[Tuple[int, int]] = deque()
-        self._cts_waiting: Deque[Tuple[Request, wire.Ctl]] = deque()
+        self._cts_waiting: Deque[Tuple[int, wire.Ctl]] = deque()  # (rid, rts)
         # ---- accounting
         self.stats = dict(eager_sent=0, rdv_sent=0, bytes_sent=0,
                           bytes_recv=0, unexpected=0, retransmits=0)
@@ -166,6 +215,23 @@ class MpiHostEngine(HostEngine):
     def attach(self, node) -> None:
         """Bind to the Node whose NIC host window we read (the mmap view)."""
         self._node = node
+
+    # ----------------------------------------------------- request registry
+    def _new_request(self, kind: str, **kw) -> Request:
+        req = Request(kind, **kw)
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self._reqs[req.rid] = req
+        return req
+
+    def _complete_req(self, req: Request, **kw) -> None:
+        self._reqs.pop(req.rid, None)
+        req._complete(**kw)
+
+    def _complete_rid(self, rid: int, **kw) -> None:
+        req = self._reqs.pop(rid, None)
+        if req is not None:
+            req._complete(**kw)
 
     # ------------------------------------------------------------- public
     def isend(self, dest: int, data: np.ndarray, tag: int = 0,
@@ -179,7 +245,7 @@ class MpiHostEngine(HostEngine):
         else:
             dtype_id = wire.NO_DTYPE
             payload = _u8view(data).copy()
-        req = Request("send", source=self.rank, tag=tag)
+        req = self._new_request("send", source=self.rank, tag=tag)
         req.nbytes = payload.size
         self.stats["bytes_sent"] += payload.size
         if dest == self.rank:
@@ -187,7 +253,7 @@ class MpiHostEngine(HostEngine):
                 wire.FIN_EAGER, src=self.rank, tag=tag, seq=0,
                 nbytes=payload.size, dtype_id=dtype_id), payload)
             self._route_envelope(env)
-            req._complete(nbytes=payload.size)
+            self._complete_req(req, nbytes=payload.size)
             return req
         mseq = self._mseq_tx.get(dest, 0)
         self._mseq_tx[dest] = mseq + 1
@@ -203,14 +269,15 @@ class MpiHostEngine(HostEngine):
             seq = self._eager_seq.get(dest, 0)
             self._eager_seq[dest] = seq + 1
             self._eager_queue.setdefault(dest, deque()).append(dict(
-                req=req, dest=dest, seq=seq, payload=payload,
+                rid=req.rid, dest=dest, seq=seq, payload=payload,
                 dtype_id=dtype_id, tag=tag, mseq=mseq))
         return req
 
     def irecv(self, buf: np.ndarray, source: int = ANY_SOURCE,
-              tag: int = ANY_TAG) -> Request:
+              tag: int = ANY_TAG, buf_id: Optional[int] = None) -> Request:
         assert source == ANY_SOURCE or 0 <= source < self.p.n_ranks
-        req = Request("recv", buf=buf, source=source, tag=tag)
+        req = self._new_request("recv", buf=buf, source=source, tag=tag)
+        req.buf_id = buf_id
         env = self._match_unexpected(source, tag)
         if env is None:
             self._posted.append(req)
@@ -252,8 +319,10 @@ class MpiHostEngine(HostEngine):
                 self._launch_eager(ent)
         # rendezvous grants waiting for a receive slot
         while self._cts_waiting and self._slot_available():
-            req, ctl = self._cts_waiting.popleft()
-            self._grant_rdv(req, ctl)
+            rid, ctl = self._cts_waiting.popleft()
+            req = self._reqs.get(rid)
+            if req is not None:
+                self._grant_rdv(req, ctl)
         # drive the SLMP data senders
         for ent in list(self._active):
             sender: slmp.SlmpSender = ent["sender"]
@@ -263,11 +332,11 @@ class MpiHostEngine(HostEngine):
                 msg = (f"rank{self.rank}: SLMP data to rank {ent['dest']} "
                        f"exhausted retries (msg_id={ent['msg_id']:#x})")
                 self.errors.append(msg)
-                ent["req"]._complete(error=msg)
+                self._complete_rid(ent["rid"], error=msg)
             elif sender.done:
                 self._active.remove(ent)
                 self.stats["retransmits"] += sender.retransmits
-                ent["on_done"]()
+                self._sender_done(ent)
         out.extend(self.ctl.poll(now))
         return out
 
@@ -289,10 +358,6 @@ class MpiHostEngine(HostEngine):
                     ent["sender"].on_ack(msg_id, off)
                     break
 
-    def snapshot(self) -> dict:
-        raise NotImplementedError(
-            "MpiHostEngine does not support fabric checkpointing yet")
-
     # ---------------------------------------------------------- send paths
     def _slmp_cfg(self, dest: int, port: int) -> slmp.SlmpSenderConfig:
         return slmp.SlmpSenderConfig(
@@ -309,31 +374,15 @@ class MpiHostEngine(HostEngine):
         sender = slmp.SlmpSender(ent["payload"], msg_id,
                                  self._slmp_cfg(dest, wire.EAGER_PORT))
         self.stats["eager_sent"] += 1
-
-        def on_done():
-            fin = wire.Ctl(wire.FIN_EAGER, src=self.rank, tag=ent["tag"],
-                           seq=seq, nbytes=ent["payload"].size,
-                           dtype_id=ent["dtype_id"], slot=slot,
-                           mseq=ent["mseq"])
-
-            def on_acked():
-                self._eager_inflight[dest].pop(seq, None)
-                self._eager_cooldown[
-                    (dest, seq % self.p.eager_slots_per_src)] = \
-                    self._now + self.p.slot_quarantine
-                ent["req"]._complete(nbytes=ent["payload"].size)
-
-            self.ctl.send(dest, fin, on_acked=on_acked)
-
-        self._active.append(dict(sender=sender, dest=dest, msg_id=msg_id,
-                                 req=ent["req"], on_done=on_done))
+        self._active.append(dict(ent, kind="eager", slot=slot,
+                                 msg_id=msg_id, sender=sender))
 
     def _start_rdv_send(self, req: Request, dest: int, payload: np.ndarray,
                         dtype_id: int, tag: int, mseq: int) -> None:
         seq = self._msg_seq.get(dest, 0)
         self._msg_seq[dest] = seq + 1
         self._rdv_sends[(dest, seq)] = dict(
-            req=req, dest=dest, seq=seq, payload=payload,
+            rid=req.rid, dest=dest, seq=seq, payload=payload,
             dtype_id=dtype_id, tag=tag)
         self.stats["rdv_sent"] += 1
         self.ctl.send(dest, wire.Ctl(wire.RTS, src=self.rank, tag=tag,
@@ -348,17 +397,37 @@ class MpiHostEngine(HostEngine):
                                   ctl.slot)
         sender = slmp.SlmpSender(ent["payload"], msg_id,
                                  self._slmp_cfg(ent["dest"], wire.DATA_PORT))
+        self._active.append(dict(ent, kind="rdv", slot=ctl.slot, mseq=0,
+                                 msg_id=msg_id, sender=sender))
 
-        def on_done():
+    def _sender_done(self, ent: dict) -> None:
+        """An SLMP data transfer fully ACKed: send the FIN whose ack token
+        completes the request (eager additionally frees its staging slot)."""
+        nbytes = int(ent["payload"].size)
+        if ent["kind"] == "eager":
+            fin = wire.Ctl(wire.FIN_EAGER, src=self.rank, tag=ent["tag"],
+                           seq=ent["seq"], nbytes=nbytes,
+                           dtype_id=ent["dtype_id"], slot=ent["slot"],
+                           mseq=ent["mseq"])
+            token = ("eafin", ent["dest"], ent["seq"], ent["rid"], nbytes)
+        else:
             fin = wire.Ctl(wire.FIN_RDV, src=self.rank, tag=ent["tag"],
-                           seq=ent["seq"], nbytes=ent["payload"].size,
-                           dtype_id=ent["dtype_id"], slot=ctl.slot)
-            self.ctl.send(ent["dest"], fin, on_acked=lambda: ent["req"]
-                          ._complete(nbytes=ent["payload"].size))
+                           seq=ent["seq"], nbytes=nbytes,
+                           dtype_id=ent["dtype_id"], slot=ent["slot"])
+            token = ("rdvfin", ent["rid"], nbytes)
+        self.ctl.send(ent["dest"], fin, token=token)
 
-        self._active.append(dict(sender=sender, dest=ent["dest"],
-                                 msg_id=msg_id, req=ent["req"],
-                                 on_done=on_done))
+    def _on_tok_acked(self, tok: tuple) -> None:
+        """Dispatch a control-ack continuation token (plain data)."""
+        if tok[0] == "eafin":
+            _, dest, seq, rid, nbytes = tok
+            self._eager_inflight.get(dest, {}).pop(seq, None)
+            self._eager_cooldown[(dest, seq % self.p.eager_slots_per_src)] \
+                = self._now + self.p.slot_quarantine
+            self._complete_rid(rid, nbytes=nbytes)
+        elif tok[0] == "rdvfin":
+            _, rid, nbytes = tok
+            self._complete_rid(rid, nbytes=nbytes)
 
     # ------------------------------------------------------- receive paths
     def _on_ctl_give_up(self, dst: int, body: wire.Ctl) -> None:
@@ -432,7 +501,8 @@ class MpiHostEngine(HostEngine):
                 f"recv buffer {view.size}B < message {ctl.nbytes}B")
             view[:ctl.nbytes] = payload[:ctl.nbytes]
         self.stats["bytes_recv"] += ctl.nbytes
-        req._complete(source=ctl.src, tag=ctl.tag, nbytes=ctl.nbytes)
+        self._complete_req(req, source=ctl.src, tag=ctl.tag,
+                           nbytes=ctl.nbytes)
 
     # --- rendezvous receive
     def _slot_available(self) -> bool:
@@ -443,14 +513,14 @@ class MpiHostEngine(HostEngine):
 
     def _grant_rdv(self, req: Request, ctl: wire.Ctl) -> None:
         if not self._slot_available():
-            self._cts_waiting.append((req, ctl))
+            self._cts_waiting.append((req.rid, ctl))
             return
         slot = self._free_slots.pop()
         mem_bytes = self.registry.mem_bytes(ctl.dtype_id)
         assert mem_bytes <= self.p.rdv_region_bytes
         assert _u8view(req.buf).size >= mem_bytes, (
             f"recv buffer {req.buf.size}B < datatype extent {mem_bytes}B")
-        self._rdv_recv[slot] = (req, ctl)
+        self._rdv_recv[slot] = (req.rid, ctl)
         self.ctl.send(ctl.src, wire.Ctl(
             wire.CTS, src=self.rank, tag=ctl.tag, seq=ctl.seq,
             nbytes=ctl.nbytes, dtype_id=ctl.dtype_id, slot=slot))
@@ -459,7 +529,10 @@ class MpiHostEngine(HostEngine):
         entry = self._rdv_recv.pop(fin.slot, None)
         if entry is None:
             return                              # duplicate FIN
-        req, rts = entry
+        rid, rts = entry
+        req = self._reqs.get(rid)
+        if req is None:
+            return
         base = self.p.rdv_base + fin.slot * self.p.rdv_region_bytes
         mem_bytes = self.registry.mem_bytes(rts.dtype_id)
         window = np.array(self._node.read_host(base, mem_bytes), np.uint8)
@@ -470,4 +543,127 @@ class MpiHostEngine(HostEngine):
         view[:mem_bytes][mask] = window[mask]
         self._quarantine.append((fin.slot, self._now))
         self.stats["bytes_recv"] += fin.nbytes
-        req._complete(source=rts.src, tag=rts.tag, nbytes=fin.nbytes)
+        self._complete_req(req, source=rts.src, tag=rts.tag,
+                           nbytes=fin.nbytes)
+
+    # ----------------------------------------------------------- checkpoint
+    def _snap_ent(self, ent: dict) -> dict:
+        """Plain copy of a send-side entry (without any live sender)."""
+        out = {k: v for k, v in ent.items() if k != "sender"}
+        out["payload"] = ent["payload"].copy()
+        return out
+
+    def _snap_request(self, req: Request) -> dict:
+        if req.buf is None:
+            buf = None
+        elif req.buf_id is not None and self.pool is not None \
+                and self.pool.has(req.buf_id):
+            buf = ("pool", req.buf_id)
+        else:
+            # aliasing into user arrays cannot survive a fresh object
+            # graph: the restored request owns a copy (read results off
+            # the request / the restored plan, not the original array)
+            buf = ("copy", np.array(req.buf))
+        return dict(rid=req.rid, kind=req.kind, source=req.source,
+                    tag=req.tag, nbytes=req.nbytes, ctoken=req.ctoken,
+                    buf=buf)
+
+    def _restore_request(self, s: dict) -> Request:
+        buf = None
+        buf_id = None
+        if s["buf"] is not None:
+            how, val = s["buf"]
+            if how == "pool":
+                assert self.pool is not None, \
+                    "pool-bound request needs a BufferPool to restore into"
+                buf, buf_id = self.pool.get(val), val
+            else:
+                buf = np.array(val)
+        req = Request(s["kind"], buf=buf, source=s["source"], tag=s["tag"])
+        req.nbytes = s["nbytes"]
+        req.rid = s["rid"]
+        req.buf_id = buf_id
+        req.ctoken = None if s["ctoken"] is None else \
+            (s["ctoken"][0], tuple(s["ctoken"][1]))
+        return req
+
+    def snapshot(self) -> dict:
+        ctl_t = dataclasses.astuple
+        return dict(
+            now=self._now,
+            next_rid=self._next_rid,
+            requests=[self._snap_request(r) for r in self._reqs.values()],
+            eager_seq=list(self._eager_seq.items()),
+            msg_seq=list(self._msg_seq.items()),
+            mseq_tx=list(self._mseq_tx.items()),
+            eager_queue=[(d, [self._snap_ent(e) for e in q])
+                         for d, q in self._eager_queue.items()],
+            eager_inflight=[(d, [(s, self._snap_ent(e))
+                                 for s, e in m.items()])
+                            for d, m in self._eager_inflight.items()],
+            eager_cooldown=list(self._eager_cooldown.items()),
+            rdv_sends=[(k, self._snap_ent(e))
+                       for k, e in self._rdv_sends.items()],
+            active=[dict(self._snap_ent(e),
+                         sender=e["sender"].snapshot())
+                    for e in self._active],
+            posted=[r.rid for r in self._posted],
+            unexpected=[_env_snap(e) for e in self._unexpected],
+            mseq_rx=list(self._mseq_rx.items()),
+            mseq_pending=[(s, [(m, _env_snap(e)) for m, e in p.items()])
+                          for s, p in self._mseq_pending.items()],
+            rdv_recv=[(slot, rid, ctl_t(c))
+                      for slot, (rid, c) in self._rdv_recv.items()],
+            free_slots=list(self._free_slots),
+            quarantine=list(self._quarantine),
+            cts_waiting=[(rid, ctl_t(c)) for rid, c in self._cts_waiting],
+            stats=dict(self.stats),
+            errors=list(self.errors),
+            ctl=self.ctl.snapshot(),
+        )
+
+    def restore(self, snap: dict) -> None:
+        self._now = snap["now"]
+        self._next_rid = snap["next_rid"]
+        self._reqs = {}
+        for rs in snap["requests"]:
+            req = self._restore_request(rs)
+            self._reqs[req.rid] = req
+        self._eager_seq = dict(snap["eager_seq"])
+        self._msg_seq = dict(snap["msg_seq"])
+        self._mseq_tx = dict(snap["mseq_tx"])
+        self._eager_queue = {
+            d: deque(self._snap_ent(e) for e in q)
+            for d, q in snap["eager_queue"]}
+        self._eager_inflight = {
+            d: {s: self._snap_ent(e) for s, e in m}
+            for d, m in snap["eager_inflight"]}
+        self._eager_cooldown = dict(snap["eager_cooldown"])
+        self._rdv_sends = {tuple(k): self._snap_ent(e)
+                           for k, e in snap["rdv_sends"]}
+        self._active = []
+        for es in snap["active"]:
+            ent = {k: v for k, v in es.items() if k != "sender"}
+            ent["payload"] = es["payload"].copy()
+            port = wire.EAGER_PORT if ent["kind"] == "eager" \
+                else wire.DATA_PORT
+            sender = slmp.SlmpSender(ent["payload"], ent["msg_id"],
+                                     self._slmp_cfg(ent["dest"], port))
+            sender.restore(es["sender"])
+            ent["sender"] = sender
+            self._active.append(ent)
+        self._posted = [self._reqs[rid] for rid in snap["posted"]]
+        self._unexpected = deque(_env_restore(t) for t in snap["unexpected"])
+        self._mseq_rx = dict(snap["mseq_rx"])
+        self._mseq_pending = {
+            s: {m: _env_restore(t) for m, t in p}
+            for s, p in snap["mseq_pending"]}
+        self._rdv_recv = {slot: (rid, wire.Ctl(*c))
+                          for slot, rid, c in snap["rdv_recv"]}
+        self._free_slots = list(snap["free_slots"])
+        self._quarantine = deque(tuple(q) for q in snap["quarantine"])
+        self._cts_waiting = deque((rid, wire.Ctl(*c))
+                                  for rid, c in snap["cts_waiting"])
+        self.stats = dict(snap["stats"])
+        self.errors = list(snap["errors"])
+        self.ctl.restore(snap["ctl"])

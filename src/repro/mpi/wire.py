@@ -146,6 +146,11 @@ class CtlEndpoint:
     ACKed always and delivered to ``self.deliver`` at most once.  This is
     the host-side analogue of SLMP's per-segment reliability, sized for
     single-frame control traffic.
+
+    Ack continuations are *tokens* (plain tuples dispatched through
+    ``self.on_acked``), not closures, so the whole endpoint — including
+    in-flight messages and their continuations — round-trips through
+    :meth:`snapshot` / :meth:`restore` for fabric checkpointing.
     """
 
     def __init__(self, rank: int, macs: List[bytes], timeout: int = 12,
@@ -155,12 +160,14 @@ class CtlEndpoint:
         self.timeout = timeout
         self.max_retries = max_retries
         self.deliver: Optional[Callable[[Ctl, int], None]] = None
+        # dispatcher for ack tokens (set by the owning engine)
+        self.on_acked: Optional[Callable[[tuple], None]] = None
         # called when a message exhausts its retries — the owner must
         # surface this as a hard failure (a silently dropped RTS/CTS/FIN
         # would otherwise hang its request until a generic timeout)
         self.on_give_up: Optional[Callable[[int, Ctl], None]] = None
         self._next_seq: Dict[int, int] = {}
-        # (dst, ctl_seq) -> [frame, last_sent, retries, on_acked, body]
+        # (dst, ctl_seq) -> [frame, last_sent, retries, token, body]
         self._unacked: Dict[Tuple[int, int], list] = {}
         self._seen: Dict[int, Set[int]] = {}
         self._ack_outbox: List[np.ndarray] = []
@@ -171,7 +178,7 @@ class CtlEndpoint:
         return not self._unacked and not self._ack_outbox
 
     def send(self, dst: int, body: Ctl,
-             on_acked: Optional[Callable[[], None]] = None) -> None:
+             token: Optional[tuple] = None) -> None:
         seq = self._next_seq.get(dst, 0)
         self._next_seq[dst] = seq + 1
         hdr = np.zeros(CTL_HDR_BYTES, np.uint8)
@@ -182,7 +189,7 @@ class CtlEndpoint:
                              sport=CTRL_PORT, dport=CTRL_PORT,
                              src_mac=self.macs[self.rank],
                              dst_mac=self.macs[dst])
-        self._unacked[(dst, seq)] = [frame, None, 0, on_acked, body]
+        self._unacked[(dst, seq)] = [frame, None, 0, token, body]
 
     def poll(self, now: int) -> List[np.ndarray]:
         out = self._ack_outbox
@@ -212,8 +219,9 @@ class CtlEndpoint:
         seq = int.from_bytes(bytes(p[3:7]), "big")
         if kind == CTL_ACK:
             ent = self._unacked.pop((src, seq), None)
-            if ent is not None and ent[3] is not None:
-                ent[3]()                           # on_acked callback
+            if ent is not None and ent[3] is not None \
+                    and self.on_acked is not None:
+                self.on_acked(ent[3])              # dispatch the ack token
             return
         if kind != CTL_MSG or len(p) < CTL_HDR_BYTES + BODY_BYTES:
             return
@@ -232,3 +240,29 @@ class CtlEndpoint:
         body = decode_body(p[CTL_HDR_BYTES:CTL_HDR_BYTES + BODY_BYTES])
         if self.deliver is not None:
             self.deliver(body, now)
+
+    # ----------------------------------------------------------- checkpoint
+    def snapshot(self) -> dict:
+        """Full endpoint state as plain data (insertion orders preserved —
+        retransmission order is part of fabric determinism)."""
+        return dict(
+            next_seq=list(self._next_seq.items()),
+            unacked=[(dst, seq, frame.copy(), last, retries, token,
+                      dataclasses.astuple(body))
+                     for (dst, seq), (frame, last, retries, token, body)
+                     in self._unacked.items()],
+            seen=[(src, sorted(s)) for src, s in self._seen.items()],
+            ack_outbox=[f.copy() for f in self._ack_outbox],
+            give_ups=self.give_ups)
+
+    def restore(self, snap: dict) -> None:
+        self._next_seq = dict(snap["next_seq"])
+        self._unacked = {
+            (dst, seq): [frame.copy(), last, retries,
+                         None if token is None else tuple(token),
+                         Ctl(*body)]
+            for dst, seq, frame, last, retries, token, body
+            in snap["unacked"]}
+        self._seen = {src: set(s) for src, s in snap["seen"]}
+        self._ack_outbox = [f.copy() for f in snap["ack_outbox"]]
+        self.give_ups = snap["give_ups"]

@@ -1,0 +1,340 @@
+"""Conformance suite for the MPI request layer: nonblocking handles
+(``test`` never blocks, ``waitall`` mixes p2p and collective handles,
+out-of-order waits), every nonblocking collective bit-exact against its
+blocking counterpart on a 5-rank fabric at loss=0.05, checkpoint/restore
+of a fabric mid-``iallreduce`` (seeded determinism against the
+uncheckpointed continuation), and the job-wide datatype-commit / NIC
+context caches staying flat across communicators.
+"""
+import numpy as np
+import pytest
+
+from repro import mpi
+from repro.core import apps
+from repro.core import ddt as ddtlib
+from repro.net import LinkConfig
+
+N_RANKS = 5
+RNG = np.random.default_rng(777)
+LOSSY = dict(loss=0.05, latency=2, jitter=2)
+
+
+@pytest.fixture(scope="module")
+def world():
+    reg = mpi.DatatypeRegistry()
+    ids = dict(
+        simple=reg.register(ddtlib.simple_ddt(), count=64, name="simple"),
+        # big enough that a rendezvous transfer spans many ticks — the
+        # checkpoint test snapshots mid-flight
+        big=reg.register(ddtlib.simple_ddt(), count=1024, name="big"),
+    )
+    comm = mpi.Communicator(N_RANKS, registry=reg, seed=0,
+                            link_cfg=LinkConfig(**LOSSY))
+    return comm, ids
+
+
+def fresh(world, seed=0, **link_kw):
+    comm, ids = world
+    cfg = dict(LOSSY, **link_kw)
+    comm.rewire(link_cfg=LinkConfig(**cfg), seed=seed)
+    return comm, ids
+
+
+# ----------------------------------------------------------- test() / wait
+def test_test_before_completion_returns_false_without_blocking(world):
+    comm, _ = fresh(world, seed=1)
+    buf = np.zeros(256, np.uint8)
+    req = comm.irecv(1, buf, source=0, tag=9)
+    t0 = comm.now
+    for _ in range(5):
+        assert req.test() is False
+    assert comm.now == t0, "test() must not tick the fabric"
+    assert comm.test(req) is False
+    msg = RNG.integers(0, 256, 200).astype(np.uint8)
+    s = comm.isend(0, 1, msg, tag=9)
+    assert s.test() is False            # still queued, no ticks yet
+    comm.waitall([req, s])
+    assert req.test() is True and s.test() is True
+    assert comm.test(req, s) is True
+    np.testing.assert_array_equal(buf[:200], msg)
+
+
+def test_request_wait_method(world):
+    comm, _ = fresh(world, seed=2)
+    msg = RNG.integers(0, 256, 300).astype(np.uint8)
+    buf = np.zeros(300, np.uint8)
+    r = comm.irecv(2, buf, source=4, tag=1)
+    comm.isend(4, 2, msg, tag=1)
+    r.wait()                            # handle-level MPI_Wait
+    np.testing.assert_array_equal(buf, msg)
+
+
+def test_waitall_mixed_p2p_and_collective_handles(world):
+    comm, _ = fresh(world, seed=3)
+    n = comm.n_ranks
+    msg = RNG.integers(0, 256, 400).astype(np.uint8)
+    buf = np.zeros(400, np.uint8)
+    vals = [RNG.integers(0, 1 << 20, 96).astype(np.int64) for _ in range(n)]
+    bdat = RNG.normal(size=128).astype(np.float32)
+    bbufs = [bdat.copy() if r == 0 else np.zeros(128, np.float32)
+             for r in range(n)]
+    reqs = [comm.irecv(3, buf, source=0, tag=7),
+            comm.isend(0, 3, msg, tag=7),
+            mpi.ibcast(comm, bbufs, root=0),
+            mpi.iallreduce(comm, vals),
+            mpi.ibarrier(comm)]
+    assert not any(r.done for r in reqs)
+    comm.waitall(reqs, max_ticks=300_000)
+    np.testing.assert_array_equal(buf, msg)
+    for b in bbufs:
+        np.testing.assert_array_equal(b, bdat)
+    ref = np.sum(vals, axis=0)
+    for o in reqs[3].result:
+        np.testing.assert_array_equal(o, ref)
+
+
+def test_out_of_order_waits(world):
+    """Waiting on a later handle first must complete the earlier ones it
+    overtakes; waiting on them afterwards is a no-op."""
+    comm, _ = fresh(world, seed=4)
+    msgs = [RNG.integers(0, 256, 300 + i).astype(np.uint8)
+            for i in range(3)]
+    bufs = [np.zeros(512, np.uint8) for _ in range(3)]
+    recvs = [comm.irecv(1, bufs[i], source=0, tag=i) for i in range(3)]
+    sends = [comm.isend(0, 1, msgs[i], tag=i) for i in range(3)]
+    comm.wait(recvs[2], max_ticks=100_000)    # newest first
+    # non-overtaking: everything the sender emitted before tag 2 matched
+    assert recvs[0].done and recvs[1].done
+    ticks = comm.wait(recvs[0], recvs[1], *sends)
+    for i in range(3):
+        np.testing.assert_array_equal(bufs[i][:300 + i], msgs[i])
+
+
+def test_collective_handle_completion_is_plan_wide(world):
+    comm, _ = fresh(world, seed=5)
+    vals = [RNG.normal(size=64) for _ in range(comm.n_ranks)]
+    h = mpi.iallreduce(comm, vals, algorithm="rd")
+    assert isinstance(h, mpi.CollRequest)
+    assert h.algorithm == "allreduce_rd"
+    comm.wait(h, max_ticks=300_000)
+    # every rank's output present and identical — one handle, whole plan
+    assert len(h.result) == comm.n_ranks
+    for o in h.result[1:]:
+        np.testing.assert_array_equal(o, h.result[0])
+
+
+# -------------------------------------- nonblocking ≡ blocking, bit-exact
+def _payloads(n, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=100).astype(np.float64) for _ in range(n)]
+
+
+@pytest.mark.parametrize("which", ["bcast", "reduce", "allreduce",
+                                   "alltoall", "alltoallv", "barrier"])
+def test_nonblocking_bit_exact_vs_blocking(world, which):
+    """Each nonblocking collective, driven with interleaved manual
+    progress, produces bit-identical results to its blocking counterpart
+    on an identically-seeded lossy fabric."""
+    comm, _ = fresh(world, seed=11)
+    n = comm.n_ranks
+
+    def build_inputs():
+        rng = np.random.default_rng(42)
+        if which == "bcast":
+            d = rng.normal(size=200).astype(np.float32)
+            return [d.copy() if r == 1 else np.zeros(200, np.float32)
+                    for r in range(n)]
+        if which in ("reduce", "allreduce"):
+            return [rng.normal(size=128) for _ in range(n)]
+        if which == "alltoall":
+            return [rng.integers(0, 1 << 30, (n, 40)).astype(np.int64)
+                    for _ in range(n)]
+        if which == "alltoallv":
+            return [[rng.integers(0, 256, ((r + 2 * j) % 5) * 32)
+                     .astype(np.uint8) for j in range(n)]
+                    for r in range(n)]
+        return None
+
+    def run(nonblocking):
+        comm.rewire(link_cfg=LinkConfig(**LOSSY), seed=11)
+        inp = build_inputs()
+        if nonblocking:
+            h = dict(bcast=lambda: mpi.ibcast(comm, inp, root=1),
+                     reduce=lambda: mpi.ireduce(comm, inp, root=2),
+                     allreduce=lambda: mpi.iallreduce(comm, inp),
+                     alltoall=lambda: mpi.ialltoall(comm, inp),
+                     alltoallv=lambda: mpi.ialltoallv(comm, inp),
+                     barrier=lambda: mpi.ibarrier(comm))[which]()
+            while not h.test():             # overlap-style driving
+                comm.progress(3)
+            out = h.result
+        else:
+            out = dict(bcast=lambda: mpi.bcast(comm, inp, root=1),
+                       reduce=lambda: mpi.reduce(comm, inp, root=2),
+                       allreduce=lambda: mpi.allreduce(comm, inp),
+                       alltoall=lambda: mpi.alltoall(comm, inp),
+                       alltoallv=lambda: mpi.alltoallv(comm, inp),
+                       barrier=lambda: mpi.barrier(comm))[which]()
+        if which == "bcast":
+            out = inp                       # in-place semantics
+        if which == "barrier":
+            out = None                      # completion is the contract
+        return out, comm.now
+
+    out_nb, _ = run(nonblocking=True)
+    out_bl, _ = run(nonblocking=False)
+
+    def flatten(x):
+        if x is None:
+            return []
+        if isinstance(x, np.ndarray):
+            return [x]
+        return [a for sub in x for a in flatten(sub)]
+
+    nb, bl = flatten(out_nb), flatten(out_bl)
+    assert len(nb) == len(bl)
+    for a, b in zip(nb, bl):
+        np.testing.assert_array_equal(a, b)   # bit-exact
+
+
+# --------------------------------------------------- checkpoint round-trip
+def _ckpt_world(registry):
+    return mpi.Communicator(
+        N_RANKS, registry=registry, seed=17,
+        link_cfg=LinkConfig(loss=0.08, latency=2, jitter=2,
+                            duplicate=0.03, reorder=0.1))
+
+
+def test_checkpoint_mid_iallreduce_roundtrip(world):
+    """Snapshot a lossy fabric mid-``iallreduce`` (plus a typed rendezvous
+    p2p in flight), restore into a fresh object graph, finish both, and
+    get bit-identical results and identical per-link loss/dup/reorder
+    counters to the uncheckpointed continuation."""
+    comm, ids = world
+    reg = comm.registry
+    c = reg.committed(ids["big"])
+    rng = np.random.default_rng(5)
+    vals = [rng.integers(0, 1 << 20, 512).astype(np.int64)
+            for _ in range(N_RANKS)]
+    ref = np.sum(vals, axis=0)
+    mem = rng.integers(0, 256, c.mem_bytes).astype(np.uint8)
+    oracle = ddtlib.unpack_np(c, ddtlib.pack_np(c, mem),
+                              np.zeros(c.mem_bytes, np.uint8))
+
+    # ---- original run: post, advance mid-flight, snapshot, continue
+    c1 = _ckpt_world(reg)
+    buf1 = np.zeros(c.mem_bytes, np.uint8)
+    p2p_r = c1.irecv(3, buf1, source=1, tag=2)
+    p2p_s = c1.isend(1, 3, mem, tag=2, datatype=ids["big"])
+    h1 = mpi.iallreduce(c1, [v.copy() for v in vals], algorithm="rd")
+    c1.progress(20)
+    assert not h1.done, "checkpoint must land mid-collective"
+    assert not p2p_r.done, "checkpoint must land mid-rendezvous"
+    snap = c1.checkpoint()
+    rid_recv, rid_send = p2p_r.rid, p2p_s.rid
+    c1.waitall([h1, p2p_r, p2p_s], max_ticks=300_000)
+    for o in h1.result:
+        np.testing.assert_array_equal(o, ref)
+    np.testing.assert_array_equal(buf1, oracle)
+    end1, stats1 = c1.now, c1.link_stats()
+
+    # ---- fresh object graph, revived from the snapshot
+    c2 = _ckpt_world(reg)
+    handles = c2.restore(snap)
+    assert list(handles) and not any(h.done for h in handles.values())
+    h2 = next(iter(handles.values()))
+    # the p2p requests were revived inside the engine snapshots
+    r2 = c2.engines[3]._reqs[rid_recv]
+    s2 = c2.engines[1]._reqs[rid_send]
+    c2.run_until(lambda: h2.done and r2.done and s2.done,
+                 max_ticks=300_000)
+    for o in h2.result:
+        np.testing.assert_array_equal(o, ref)
+    np.testing.assert_array_equal(r2.buf, oracle)
+    assert c2.now == end1, "restored run must take the same ticks"
+    for s1, s2 in zip(stats1, c2.link_stats()):
+        assert s1 == s2, "per-link drop/dup/reorder counters must match"
+
+
+def test_checkpoint_is_nonperturbing(world):
+    """Taking a snapshot must not change the run that continues."""
+    comm, _ = fresh(world, seed=23)
+    vals = [RNG.integers(0, 1 << 16, 64).astype(np.int64)
+            for _ in range(comm.n_ranks)]
+    h = mpi.iallreduce(comm, vals, algorithm="tree")
+    comm.progress(15)
+    comm.checkpoint()                       # discarded
+    comm.wait(h, max_ticks=300_000)
+    end_with = comm.now
+
+    comm.rewire(link_cfg=LinkConfig(**LOSSY), seed=23)
+    h = mpi.iallreduce(comm, vals, algorithm="tree")
+    comm.progress(15)
+    comm.wait(h, max_ticks=300_000)
+    assert comm.now == end_with
+
+
+# ------------------------------------------- datatype commit / NIC caches
+def test_datatype_recommit_stays_flat_across_communicators(world):
+    """Two communicators reusing the same (ddt, count) must not recommit
+    the datatype nor rebuild/re-upload the NIC DDT context — guards the
+    job-wide commit cache and the NIC cache."""
+    comm, _ = world                         # module NIC already built
+    vec = ddtlib.Vector(count=16, blocklen=2, stride=4,
+                        base=ddtlib.MPI_FLOAT)
+
+    reg1 = mpi.DatatypeRegistry()
+    reg1.register(vec, count=8, name="v")
+    commits_after_first = mpi.COMMIT_COUNTERS["commits"]
+
+    reg2 = mpi.DatatypeRegistry()
+    reg2.register(vec, count=8, name="v")   # same (ddt, count)
+    assert mpi.COMMIT_COUNTERS["commits"] == commits_after_first, \
+        "second registry recommitted a cached (ddt, count)"
+    assert mpi.COMMIT_COUNTERS["hits"] >= 1
+
+    comm_a = mpi.Communicator(2, registry=reg1, seed=0)
+    builds = dict(apps.MPI_CONTEXT_BUILDS)
+    comm_b = mpi.Communicator(2, registry=reg2, seed=1)
+    assert apps.MPI_CONTEXT_BUILDS == builds, \
+        "NIC context rebuilt although tables and geometry are identical"
+    assert comm_b.nic is comm_a.nic         # shared compiled datapath
+
+    # the cached NIC still moves typed data correctly on both comms
+    cid = reg2.resolve((vec, 8))
+    c = reg2.committed(cid)
+    mem = RNG.integers(0, 256, c.mem_bytes).astype(np.uint8)
+    buf = np.zeros(c.mem_bytes, np.uint8)
+    r = comm_b.irecv(1, buf, source=0, tag=1)
+    s = comm_b.isend(0, 1, mem, tag=1, datatype=cid)
+    comm_b.waitall([r, s])
+    oracle = ddtlib.unpack_np(c, ddtlib.pack_np(c, mem),
+                              np.zeros(c.mem_bytes, np.uint8))
+    np.testing.assert_array_equal(buf, oracle)
+
+
+def test_log_step_algorithms_beat_linear_round_count(world):
+    """The schedule metadata the bench records: recursive doubling takes
+    ⌈log₂ n⌉ rounds (+2 fold rounds off powers of two) where the linear
+    baseline takes n−1 — a strict win for every power-of-two rank count
+    (the 8-rank case is asserted end-to-end by bench_mpi)."""
+    comm, _ = fresh(world, seed=31)
+    n = comm.n_ranks                         # 5: pof2=4, rem=1
+    vals = [np.ones(8, np.int64) for _ in range(n)]
+    h_rd = mpi.iallreduce(comm, vals, algorithm="rd")
+    h_lin = mpi.iallreduce(comm, vals, algorithm="linear")
+    comm.waitall([h_rd, h_lin], max_ticks=300_000)
+    pof2 = 1 << (n.bit_length() - 1)
+    want_rd = pof2.bit_length() - 1 + (2 if n != pof2 else 0)
+    assert h_rd.rounds == want_rd <= h_lin.rounds
+    assert h_lin.rounds == n - 1
+    # at any power of two the log-step schedule is strictly shorter
+    for m in (4, 8, 16, 64, 256):
+        assert m.bit_length() - 1 < m - 1
+    mats = [np.ones((comm.n_ranks, 4), np.int64)
+            for _ in range(comm.n_ranks)]
+    h_br = mpi.ialltoall(comm, mats, algorithm="bruck")
+    h_pw = mpi.ialltoall(comm, mats, algorithm="pairwise")
+    comm.waitall([h_br, h_pw], max_ticks=300_000)
+    assert h_br.rounds < h_pw.rounds
+    assert h_br.msgs_total < h_pw.msgs_total

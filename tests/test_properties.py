@@ -196,6 +196,78 @@ def test_checksum_rfc1071_properties(data):
     assert pkt.internet_checksum_np(with_ck) == 0
 
 
+# -------------------------------------------- log-step MPI collectives
+# One lossy Communicator per rank count, built lazily and rewired per
+# example (the jitted NIC datapath compiles once per n).
+_MPI_COMMS = {}
+
+
+def _mpi_comm(n):
+    from repro import mpi
+    from repro.net import LinkConfig
+    if n not in _MPI_COMMS:
+        _MPI_COMMS[n] = mpi.Communicator(
+            n, seed=0, link_cfg=LinkConfig(loss=0.02, latency=1, jitter=1))
+    return _MPI_COMMS[n]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([2, 3, 4, 5]), st.integers(1, 48),
+       st.sampled_from(["int64", "int32", "uint8"]),
+       st.integers(0, 2**31 - 1))
+def test_rd_allreduce_agrees_with_linear(n, count, dtype, seed):
+    """Recursive-doubling allreduce (including the non-power-of-two fold)
+    computes exactly what the naive linear gather+fan-out computes, for
+    any rank count, payload size, and integer dtype (exact ops — the
+    combine order cannot hide behind rounding)."""
+    from repro import mpi
+    from repro.net import LinkConfig
+    comm = _mpi_comm(n)
+    rng = np.random.default_rng(seed)
+    vals = [rng.integers(0, 1 << 20, count).astype(dtype)
+            for _ in range(n)]
+    comm.rewire(link_cfg=LinkConfig(loss=0.02, latency=1, jitter=1),
+                seed=seed % 1000)
+    rd = mpi.allreduce(comm, vals, algorithm="rd", max_ticks=400_000)
+    comm.rewire(link_cfg=LinkConfig(loss=0.02, latency=1, jitter=1),
+                seed=seed % 1000)
+    lin = mpi.allreduce(comm, vals, algorithm="linear",
+                        max_ticks=400_000)
+    ref = np.sum(np.stack(vals).astype(np.int64), axis=0).astype(dtype)
+    for a, b in zip(rd, lin):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, ref)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([2, 3, 4, 5]), st.integers(0, 6),
+       st.integers(1, 32), st.integers(0, 2**31 - 1))
+def test_bruck_alltoallv_agrees_with_pairwise(n, size_spread, unit, seed):
+    """Bruck's ⌈log₂ n⌉-round store-and-forward exchange delivers exactly
+    the blocks the naive pairwise exchange delivers — for any rank count
+    (powers of two or not) and variable per-pair block sizes, including
+    zero-size blocks."""
+    from repro import mpi
+    from repro.net import LinkConfig
+    comm = _mpi_comm(n)
+    rng = np.random.default_rng(seed)
+    blocks = [[rng.integers(0, 256,
+                            int(rng.integers(0, size_spread + 1)) * unit)
+               .astype(np.uint8) for _ in range(n)] for _ in range(n)]
+    comm.rewire(link_cfg=LinkConfig(loss=0.02, latency=1, jitter=1),
+                seed=seed % 1000)
+    br = mpi.alltoallv(comm, blocks, algorithm="bruck",
+                       max_ticks=400_000)
+    comm.rewire(link_cfg=LinkConfig(loss=0.02, latency=1, jitter=1),
+                seed=seed % 1000)
+    pw = mpi.alltoallv(comm, blocks, algorithm="pairwise",
+                       max_ticks=400_000)
+    for r in range(n):
+        for i in range(n):
+            np.testing.assert_array_equal(br[r][i], pw[r][i])
+            np.testing.assert_array_equal(br[r][i], blocks[i][r])
+
+
 # ---------------------------------------------------------------- MoE
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1))
