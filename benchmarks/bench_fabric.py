@@ -20,7 +20,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, timed_scenario
 from repro.core import apps, packet as pkt, slmp
 from repro.net import Fabric, LinkConfig, Node, PingPongClient, \
     SlmpSenderEngine
@@ -54,22 +54,26 @@ def _goodput_sweep(tx: Node, rx: Node, msg: np.ndarray) -> List[dict]:
             t_ns = ticks * TICK_NS
             gbps = len(msg) * 8 / t_ns if delivered else 0.0
             s = sender.sender
-            wire = fab.link_stats()[1]
+            fstats = fab.stats()
+            wire = fstats["links"][1]
             rec = dict(kind="slmp_goodput", loss=loss, window=window,
                        ticks=ticks, delivered=delivered,
                        segments=s.nseg, sent_frames=s.sent_frames,
                        retransmits=s.retransmits,
                        goodput_gbps=round(gbps, 3),
+                       unroutable=fstats["unroutable"],
                        wire=wire)
             records.append(rec)
-            # per-link drop/duplicate/reorder counters make loss-sweep
-            # anomalies diagnosable from the CSV alone
+            # per-link drop/duplicate/reorder/stall counters (and the
+            # fabric's unroutable count) make loss-sweep anomalies
+            # diagnosable from the CSV alone
             row(f"fabric_slmp_loss{int(loss * 100)}_w{window}",
                 t_ns / 1e3,
                 f"gbps={gbps:.2f};retx={s.retransmits};"
                 f"delivered={delivered};lost={wire['lost']};"
                 f"dup={wire['duplicated']};reo={wire['reordered']};"
-                f"ovfl={wire['overflowed']}")
+                f"ovfl={wire['overflowed']};defer={wire['deferred']};"
+                f"unroutable={fstats['unroutable']}")
     return records
 
 
@@ -89,18 +93,21 @@ def _latency_sweep(server_ctx) -> List[dict]:
         fab.run(max_ticks=5_000)
         rtts = client.rtts
         mean_ticks = float(np.mean(rtts)) if rtts else float("nan")
-        wire = fab.link_stats()[1]
+        fstats = fab.stats()
+        wire = fstats["links"][1]
         rec = dict(kind="pingpong_latency", loss=loss,
                    completed=len(rtts), timeouts=client.timeouts,
                    mean_rtt_ticks=mean_ticks,
                    mean_rtt_us=round(mean_ticks * TICK_NS / 1e3, 2),
+                   unroutable=fstats["unroutable"],
                    wire=wire)
         records.append(rec)
         row(f"fabric_pingpong_loss{int(loss * 100)}",
             mean_ticks * TICK_NS / 1e3,
             f"rtt_ticks={mean_ticks:.1f};timeouts={client.timeouts};"
             f"lost={wire['lost']};dup={wire['duplicated']};"
-            f"reo={wire['reordered']}")
+            f"reo={wire['reordered']};defer={wire['deferred']};"
+            f"unroutable={fstats['unroutable']}")
     return records
 
 
@@ -111,8 +118,14 @@ def run(json_path: Optional[str] = JSON_PATH) -> List[dict]:
               batch=BATCH)
     rx = Node("rx", pkt.node_mac(1), [slmp.make_slmp_context()],
               batch=BATCH, host_bytes=1 << 17)
-    records = _goodput_sweep(tx, rx, msg)
-    records += _latency_sweep(apps.make_udp_pingpong_context())
+    records: List[dict] = []
+    timed_scenario("slmp_goodput",
+                   lambda recs: recs.extend(_goodput_sweep(tx, rx, msg)),
+                   records)
+    timed_scenario("pingpong_latency",
+                   lambda recs: recs.extend(
+                       _latency_sweep(apps.make_udp_pingpong_context())),
+                   records)
     if json_path:
         payload = dict(bench="fabric", tick_ns=TICK_NS,
                        msg_bytes=MSG_BYTES, records=records)

@@ -24,12 +24,13 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from typing import List, Optional
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, timed_scenario
 from repro import mpi
 from repro.core import ddt as ddtlib
 from repro.net import LinkConfig
@@ -41,6 +42,19 @@ MM_FACTOR = 1.25                        # compute = 1.25 x lossless transfer
 NODE_COUNTS = [2, 4, 8]
 COLLECTIVE_BYTES = 1 << 13              # per-rank payload for goodput rows
 JSON_PATH = "BENCH_mpi.json"
+
+# ---- large-message fast path sweep (per-rank vector sizes) ----
+LARGE_SIZES = [256 << 10, 1 << 20, 4 << 20]
+LARGE_LOSSES = [0.0, 0.02]
+LARGE_RANKS = 8
+
+
+def _large_cfg() -> mpi.MpiConfig:
+    """Wire sized for multi-MiB vectors: big frames, deep SLMP windows,
+    wide NIC ingress batches, 128 KiB rendezvous segments, 8 slot
+    credits — the configuration the gradient-sync numbers are quoted at."""
+    return mpi.MpiConfig(batch=32, slmp_window=64, mtu_payload=1408,
+                         n_rdv_slots=8, coll_seg_bytes=128 << 10)
 
 
 def _dtypes():
@@ -211,11 +225,132 @@ def _overlap_nonblocking(records: List[dict]) -> None:
                 f"R={r_mean:.4f};rounds={h.rounds}")
 
 
-def run(json_path: Optional[str] = JSON_PATH) -> List[dict]:
+def _allreduce_large_sweep(records: List[dict]) -> None:
+    """The large-message fast path head-to-head: Rabenseifner (the auto
+    pick at these sizes) vs recursive doubling, 8 ranks, 256 KiB–4 MiB
+    per rank, lossless and 2% loss.  Every point records the schedule
+    metadata (rounds / msgs / bytes-on-wire) so the win is attributable:
+    rd ships ⌈log₂ n⌉ full vectors per rank where Rabenseifner ships
+    ~2·(n−1)/n of one — and at the largest size that bandwidth gap must
+    show up in modeled ticks too (asserted)."""
+    comm = mpi.Communicator(LARGE_RANKS, seed=0, cfg=_large_cfg(),
+                            link_cfg=LinkConfig(latency=1))
+    rng = np.random.default_rng(21)
+    for loss in LARGE_LOSSES:
+        for nbytes in LARGE_SIZES:
+            vals = [rng.integers(0, 1 << 20, nbytes // 8).astype(np.int64)
+                    for _ in range(LARGE_RANKS)]
+            ref = np.sum(np.stack(vals), axis=0)
+            by_alg = {}
+            for alg in ("rd", "auto"):
+                comm.rewire(link_cfg=LinkConfig(loss=loss, latency=1),
+                            seed=31)
+                t0 = comm.now
+                h = mpi.iallreduce(comm, vals, algorithm=alg)
+                comm.wait(h, max_ticks=4_000_000)
+                ticks = comm.now - t0
+                assert all((o == ref).all() for o in h.result)
+                stalls = sum(e["credit_stalls"] for e in comm.stats())
+                gbps = nbytes * LARGE_RANKS * 8 / (ticks * TICK_NS)
+                rec = dict(kind="allreduce_sweep", n_ranks=LARGE_RANKS,
+                           bytes_per_rank=nbytes, loss=loss,
+                           requested=alg, algorithm=h.algorithm,
+                           rounds=h.rounds, msgs_total=h.msgs_total,
+                           bytes_wire=h.bytes_wire, ticks=ticks,
+                           credit_stalls=stalls,
+                           goodput_gbps=round(float(gbps), 3))
+                records.append(rec)
+                by_alg[h.algorithm] = rec
+                row(f"allreduce_{h.algorithm}_{nbytes >> 10}k"
+                    f"_loss{int(loss * 100)}", ticks * TICK_NS / 1e3,
+                    f"gbps={gbps:.2f};wireMB={h.bytes_wire / 2**20:.1f};"
+                    f"rounds={h.rounds};msgs={h.msgs_total};"
+                    f"stalls={stalls}")
+            assert "allreduce_rab" in by_alg, \
+                "auto must select Rabenseifner at large sizes"
+            rab, rd = by_alg["allreduce_rab"], by_alg["allreduce_rd"]
+            assert rab["bytes_wire"] < rd["bytes_wire"], (rab, rd)
+            if nbytes == max(LARGE_SIZES):
+                assert rab["ticks"] < rd["ticks"], (rab, rd)
+
+
+def _grad_allreduce(records: List[dict]) -> None:
+    """The trainer's gradient sync end-to-end: a ≥4 MiB gradient pytree
+    per shard, reduced through :class:`repro.train.manual_dp.FabricGradSync`
+    (nonblocking Rabenseifner over the fabric) with the progress hook
+    driven from inside a modeled backprop window 1.25x the lossless
+    transfer — §V-C overlap methodology applied to the data-parallel
+    step.  At loss=0 the transfer must hide almost completely."""
+    from repro.train.manual_dp import FabricGradSync
+    n = 4
+    comm = mpi.Communicator(n, seed=7, cfg=_large_cfg(),
+                            link_cfg=LinkConfig(latency=1))
+    rng = np.random.default_rng(33)
+    # a transformer-block-shaped gradient pytree, ~4.25 MiB of f32
+    shapes = dict(wq=(1024, 256), wk=(1024, 256), wv=(1024, 256),
+                  wo=(256, 1024), w_up=(256, 1024), w_down=(1024, 192),
+                  embed=(4096, 24), norm=(1024,))
+    grads = [{k: rng.normal(size=s).astype(np.float32)
+              for k, s in shapes.items()} for _ in range(n)]
+    ref_mean = {k: np.mean(np.stack([g[k] for g in grads]), axis=0,
+                           dtype=np.float64).astype(np.float32)
+                for k in shapes}
+    sync = FabricGradSync(comm)
+    # calibrate: lossless completion with no compute overlap
+    sync.post([{k: g[k].copy() for k in g} for g in grads])
+    sync.wait()
+    t_xfer0 = sync.last_stats["total_ticks"]
+    t_mm = int(np.ceil(MM_FACTOR * t_xfer0))
+    for loss in LARGE_LOSSES:
+        comm.rewire(link_cfg=LinkConfig(loss=loss, latency=1), seed=13)
+        sync.post([{k: g[k].copy() for k in g} for g in grads])
+        left = t_mm
+        while left > 0:                 # the backprop progress hook
+            sync.progress(min(64, left))
+            left -= 64
+        means = sync.wait()
+        st = sync.last_stats
+        for m in means:
+            for k in shapes:
+                np.testing.assert_allclose(m[k], ref_mean[k], rtol=1e-5,
+                                           atol=1e-6)
+        gbps = st["grad_bytes"] * 8 / (st["total_ticks"] * TICK_NS)
+        rec = dict(kind="grad_allreduce", n_ranks=n, loss=loss,
+                   grad_bytes=st["grad_bytes"],
+                   algorithm=st["algorithm"], rounds=st["rounds"],
+                   msgs_total=st["msgs_total"],
+                   bytes_wire=st["bytes_wire"], t_mm_ticks=t_mm,
+                   poll_ticks=st["poll_ticks"],
+                   overlap_ratio=round(st["overlap_ratio"], 4),
+                   goodput_gbps=round(float(gbps), 3))
+        records.append(rec)
+        row(f"grad_allreduce_loss{int(loss * 100)}",
+            st["total_ticks"] * TICK_NS / 1e3,
+            f"R={st['overlap_ratio']:.4f};gbps={gbps:.2f};"
+            f"alg={st['algorithm']}")
+        if loss == 0.0:
+            assert st["overlap_ratio"] >= 0.9, st
+
+
+SCENARIOS = [
+    ("overlap", _overlap_sweep),
+    ("collective", _collective_sweep),
+    ("overlap_nonblocking", _overlap_nonblocking),
+    ("allreduce_large", _allreduce_large_sweep),
+    ("grad_allreduce", _grad_allreduce),
+]
+
+
+def run(json_path: Optional[str] = JSON_PATH,
+        scenario_filter: Optional[str] = None) -> List[dict]:
     records: List[dict] = []
-    _overlap_sweep(records)
-    _collective_sweep(records)
-    _overlap_nonblocking(records)
+    selected = [(n, fn) for n, fn in SCENARIOS
+                if not scenario_filter or scenario_filter in n]
+    if not selected:
+        sys.exit(f"no bench_mpi scenario matches {scenario_filter!r}; "
+                 f"available: " + ", ".join(n for n, _ in SCENARIOS))
+    for name, fn in selected:
+        timed_scenario(name, fn, records)
     if json_path:
         payload = dict(bench="mpi", tick_ns=TICK_NS, mm_factor=MM_FACTOR,
                        records=records)
@@ -227,4 +362,4 @@ def run(json_path: Optional[str] = JSON_PATH) -> List[dict]:
 
 
 if __name__ == "__main__":
-    run()
+    run(scenario_filter=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -24,3 +24,19 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.2f},{derived}"
     print(line)
     return line
+
+
+def timed_scenario(name: str, fn: Callable, records: list,
+                   *args, **kw) -> None:
+    """Run one benchmark scenario and stamp its harness wall-clock seconds
+    into every record it appended — a perf trajectory for the *harness*
+    itself, so a simulator slowdown is visible across PRs even when the
+    modeled tick numbers stay flat."""
+    n0 = len(records)
+    t0 = time.perf_counter()
+    fn(records, *args, **kw)
+    dt = round(time.perf_counter() - t0, 2)
+    for rec in records[n0:]:
+        rec.setdefault("scenario", name)
+        rec["harness_seconds"] = dt
+    row(f"scenario_{name}_wall", dt * 1e6, f"records={len(records) - n0}")

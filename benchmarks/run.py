@@ -12,14 +12,24 @@
   bench_latency  : Table II (module latencies)
   bench_kernels  : Pallas kernel micro-benchmarks
 
-Usage: ``python -m benchmarks.run [filter]`` runs every suite whose name
-contains ``filter`` (all when omitted); ``--list`` prints the suite names.
-A filter matching nothing is an error, not a silent no-op.
+Usage: ``python -m benchmarks.run [filter] [--filter SCENARIO]`` runs
+every suite whose name contains ``filter`` (all when omitted);
+``--filter SCENARIO`` additionally restricts suites that define scenarios
+(currently ``bench_mpi``) to the scenarios whose name contains SCENARIO
+— e.g. ``python -m benchmarks.run mpi --filter allreduce_large`` is the
+CI smoke for the large-message fast path.  ``--list`` prints the suite
+names.  A filter matching nothing is an error, not a silent no-op.
+
+Suites that write ``BENCH_*.json`` stamp each record with the scenario
+name and its harness wall-clock seconds (``harness_seconds``), so a
+simulator slowdown is visible across PRs even when modeled ticks stay
+flat.
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
@@ -37,7 +47,14 @@ def main() -> None:
         ("table2_latency", bench_latency.run),
         ("kernels", bench_kernels.run),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    scenario = None
+    if "--filter" in args:
+        i = args.index("--filter")
+        assert i + 1 < len(args), "--filter needs a scenario name"
+        scenario = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    only = args[0] if args else None
     if only in ("--list", "-l"):
         for name, _ in suites:
             print(name)
@@ -46,11 +63,20 @@ def main() -> None:
     if not selected:
         sys.exit(f"no benchmark suite matches {only!r}; available: "
                  + ", ".join(n for n, _ in suites))
+    if scenario is not None:
+        selected = [(n, fn) for n, fn in selected
+                    if "scenario_filter" in inspect.signature(fn).parameters]
+        if not selected:
+            sys.exit(f"--filter {scenario!r} matches no suite that "
+                     f"defines scenarios")
     print("name,us_per_call,derived")
     for name, fn in selected:
         t0 = time.time()
         print(f"# --- {name} ---")
-        fn()
+        if "scenario_filter" in inspect.signature(fn).parameters:
+            fn(scenario_filter=scenario)
+        else:
+            fn()
         print(f"# {name} done in {time.time() - t0:.1f}s")
 
 

@@ -8,6 +8,7 @@
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax.numpy as jnp
@@ -195,8 +196,16 @@ def make_mpi_ddt_context(maps, msg_lens, region_bytes: int, n_slots: int,
     """Rendezvous receive context with *offloaded datatype processing*:
     payload bytes scatter through the committed msg→mem index map of the
     datatype named in the msg_id, straight into the posted receive region
-    (``slot * region_bytes``) of host memory — the dataloop-engine offload
-    of paper §V-C, generalized to a table of committed datatypes.
+    (``phys_slot * region_bytes``) of host memory — the dataloop-engine
+    offload of paper §V-C, generalized to a table of committed datatypes.
+
+    The msg_id's 16-bit slot field carries a *virtual* slot
+    ``gen · n_slots + phys``: the host arms ``expect[phys]`` with the full
+    msg_id before granting the CTS, and the handler drops any frame whose
+    msg_id does not match — a stale retransmit of the region's previous
+    occupant (still queued in a congested link) can never scribble a
+    recycled slot, which is what lets the credit manager reuse slots the
+    moment they FIN, with no quarantine delay.
 
     ``maps``: (D, Mmax) int32, msg→mem byte map per datatype, -1-padded;
     ``msg_lens``: (D,) int32 serialized size per datatype.
@@ -210,20 +219,22 @@ def make_mpi_ddt_context(maps, msg_lens, region_bytes: int, n_slots: int,
     def mpi_ddt_packet_handler(args: H.HandlerArgs, user) -> H.HandlerOut:
         out = H.none_out()
         msg_id = args.msg_id.astype(jnp.int32)
-        slot = msg_id & MPI_MSGID_SLOT_MASK
+        vslot = msg_id & MPI_MSGID_SLOT_MASK
+        phys = vslot % n_slots
         dtype = (msg_id >> MPI_MSGID_DTYPE_SHIFT) & MPI_MSGID_DTYPE_MASK
         row = maps[jnp.clip(dtype, 0, n_types - 1)]
         msg_len = msg_lens[jnp.clip(dtype, 0, n_types - 1)]
         msg_pos, live = _slmp_payload_lanes(args)
-        live = live & (msg_pos < msg_len) & (slot < n_slots) \
-            & (dtype < n_types)
+        armed = jnp.take(args.expect, phys) == args.msg_id
+        live = live & (msg_pos < msg_len) & (dtype < n_types) & armed
         mem_off = jnp.take(row, jnp.clip(msg_pos, 0, max_msg - 1))
         dma_off = jnp.where(live & (mem_off >= 0),
-                            slot * region_bytes + mem_off, -1)
+                            phys * region_bytes + mem_off, -1)
         out = H.spin_dma_scatter(out, dma_off, args.pkt)
         out = H.add_msg_state(out, 1, args.pkt_len - pkt.SLMP_PAYLOAD)
         return _ack_if_syn(out, args)
 
-    return slmp.make_slmp_context(
+    ctx = slmp.make_slmp_context(
         port=port, host_base=host_base, host_size=n_slots * region_bytes,
         name="mpi_ddt_unpack", packet_handler=mpi_ddt_packet_handler)
+    return dataclasses.replace(ctx, n_expect=n_slots)

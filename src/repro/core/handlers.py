@@ -56,6 +56,11 @@ class HandlerArgs(NamedTuple):
     ctx: jax.Array        # () int32
     msg_state: jax.Array  # (MSG_STATE_DIM,) int32
     cycles: jax.Array     # () int32 — global cycle counter (cycles())
+    expect: jax.Array     # (E,) uint32 — host-programmed per-slot expected
+    #                       msg_id table (shared across lanes): contexts
+    #                       that reuse DMA regions check arriving frames
+    #                       against it so a stale retransmit of a previous
+    #                       occupant can never scribble a recycled slot
 
 
 class HandlerOut(NamedTuple):
@@ -155,16 +160,24 @@ class ExecutionContext:
     user: Any = None                      # constant pytree (device arrays)
     host_base: int = 0                    # base offset into host DMA buffer
     host_size: int = 0
+    n_expect: int = 0                     # slots of the host-programmed
+    #                                       expected-msg_id table this
+    #                                       context owns (0 = unused)
     # message_mode=True: the protocol defines messages (header/tail handlers
     # run, MPQ tracks state).  False: pure packet matching (sPIN layer-2
     # mode — "simply execute the packet handler on every matching packet").
     message_mode: bool = False
 
 
+_ARGS_AXES = HandlerArgs(pkt=0, pkt_len=0, msg_id=0, eom=0, ctx=0,
+                         msg_state=0, cycles=0, expect=None)
+
+
 def run_phase(fn: HandlerFn, args: HandlerArgs, user: Any,
               mask: jax.Array) -> HandlerOut:
-    """vmap one handler over the batch and mask out non-participants."""
-    outs = jax.vmap(fn, in_axes=(0, None))(args, user)
+    """vmap one handler over the batch and mask out non-participants
+    (the expect table is shared, not per-lane)."""
+    outs = jax.vmap(fn, in_axes=(_ARGS_AXES, None))(args, user)
     n = mask.shape[0]
     return HandlerOut(
         egress_data=outs.egress_data,

@@ -55,11 +55,15 @@ class NICState:
     counter_count: jax.Array  # (Q,) int32
     cycles: jax.Array        # () int32
     dropped: jax.Array       # () int32 — alloc-failure drops
+    expect: jax.Array        # (E,) uint32 — host-programmed per-slot
+    #                          expected msg_id (0 = slot disarmed); the
+    #                          MMIO analogue of posting a receive to the
+    #                          NIC before granting the sender a CTS
 
     def tree_flatten(self):
         return (self.l2, self.alloc, self.mpq, self.msg_state, self.host,
                 self.counters, self.counter_count, self.cycles,
-                self.dropped), None
+                self.dropped, self.expect), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -95,6 +99,11 @@ class SpinNIC:
         self.mpq_entries = mpq_entries
         self.tables = matching.MatchTables.build(
             [c.ruleset for c in contexts])
+        # the expect table currently has a single flat slot space indexed
+        # from 0: exactly one context may own it (per-context base offsets
+        # would be needed for more — assert rather than silently alias)
+        assert sum(1 for c in contexts if c.n_expect > 0) <= 1, \
+            "only one execution context may use the expect table"
         self._msgful = jnp.asarray(
             np.array([c.message_mode for c in contexts], bool))
         self._host_base = jnp.asarray(
@@ -115,6 +124,9 @@ class SpinNIC:
             counter_count=jnp.zeros((H.N_COUNTER_QUEUES,), jnp.int32),
             cycles=jnp.zeros((), jnp.int32),
             dropped=jnp.zeros((), jnp.int32),
+            expect=jnp.zeros(
+                (max(1, sum(c.n_expect for c in self.contexts)),),
+                jnp.uint32),
         )
 
     # --------------------------------------------------------------- step
@@ -145,13 +157,24 @@ class SpinNIC:
         dropped = state.dropped + (process & ~ok).sum().astype(jnp.int32)
         live = process & ok
 
-        # (3) ingress DMA into the L2 packet buffer
-        write_off = jnp.where(
-            live[:, None] & (byte_iota[None, :] < batch.length[:, None]),
-            addr[:, None] + byte_iota[None, :],
-            palloc.L2_PKT_BYTES)                       # OOB -> dropped
-        l2 = state.l2.at[write_off.reshape(-1)].set(
-            batch.data.reshape(-1), mode="drop")
+        # (3) ingress DMA into the L2 packet buffer.  Frames land at
+        # contiguous slot addresses, so this is a masked read-modify-write
+        # of one MTU window per lane (dynamic_update_slice), not a
+        # per-byte scatter — XLA:CPU executes scatters element-by-element,
+        # and this loop is ~10x cheaper than the equivalent flat scatter.
+        # Slot geometry guarantees addr + MTU <= L2_PKT_BYTES (large slots
+        # are MTU-sized and the region ends on a slot boundary).
+        def _dma_in(i, l2):
+            a = addr[i]
+            window = jax.lax.dynamic_slice(l2, (a,), (pkt.MTU,))
+            keep = live[i] & (byte_iota < batch.length[i])
+            return jax.lax.dynamic_update_slice(
+                l2, jnp.where(keep, batch.data[i], window), (a,))
+
+        l2 = jax.lax.cond(
+            live.any(),
+            lambda l2: jax.lax.fori_loop(0, n, _dma_in, l2),
+            lambda l2: l2, state.l2)
 
         # (4) HER generation + scheduling (message-mode contexts only track
         #     MPQ state; packet-mode contexts always run packet handlers)
@@ -172,7 +195,8 @@ class SpinNIC:
                 pkt=pkt_view, pkt_len=batch.length, msg_id=msg_id,
                 eom=eom, ctx=ctx_id,
                 msg_state=msg_state[her.slot],
-                cycles=jnp.broadcast_to(state.cycles, (n,)))
+                cycles=jnp.broadcast_to(state.cycles, (n,)),
+                expect=state.expect)
 
         msg_state = state.msg_state
         phase_outs = []
@@ -194,15 +218,21 @@ class SpinNIC:
                 jnp.where(phase_mask[:, None], acc.state_delta, 0))
             phase_outs.append(acc)
 
-        # (6a) host DMA: byte-granular scatter (unaligned-capable)
+        # (6a) host DMA: byte-granular scatter (unaligned-capable).  Each
+        # phase's scatter runs under a cond so phases that DMA'd nothing
+        # this batch (header/tail on most traffic, every phase on ACK-only
+        # batches) skip the expensive CPU scatter entirely.
         host = state.host
         base = self._host_base[jnp.maximum(ctx_id, 0)]
         for out in phase_outs:
             off = jnp.where(out.dma_off >= 0,
                             base[:, None] + out.dma_off,
                             self.host_bytes)           # OOB -> dropped
-            host = host.at[off.reshape(-1)].set(
-                out.dma_val.reshape(-1), mode="drop")
+            host = jax.lax.cond(
+                (out.dma_off >= 0).any(),
+                lambda h, o=off, v=out.dma_val: h.at[o.reshape(-1)].set(
+                    v.reshape(-1), mode="drop"),
+                lambda h: h, host)
 
         # (6b) egress arbitration (axis_arb_mux): compact all sends
         eg_data = jnp.concatenate([o.egress_data for o in phase_outs])
@@ -212,20 +242,27 @@ class SpinNIC:
         egress = pkt.PacketBatch(eg_data[order], eg_len[order],
                                  eg_valid[order])
 
-        # (6c) counter FIFOs
+        # (6c) counter FIFOs (cond-gated: most phases push no counters)
         counters, counter_count = state.counters, state.counter_count
         for out in phase_outs:
-            for q in range(H.N_COUNTER_QUEUES):
-                sel = out.counter_queue == q
-                rank = jnp.cumsum(sel.astype(jnp.int32)) - 1
-                pos = jnp.where(sel,
-                                (counter_count[q] + rank)
-                                % H.COUNTER_QUEUE_LEN,
-                                H.COUNTER_QUEUE_LEN)
-                counters = counters.at[q, pos].set(out.counter_val,
-                                                   mode="drop")
-                counter_count = counter_count.at[q].add(
-                    sel.sum().astype(jnp.int32))
+            def _push_counters(cc, out=out):
+                counters, counter_count = cc
+                for q in range(H.N_COUNTER_QUEUES):
+                    sel = out.counter_queue == q
+                    rank = jnp.cumsum(sel.astype(jnp.int32)) - 1
+                    pos = jnp.where(sel,
+                                    (counter_count[q] + rank)
+                                    % H.COUNTER_QUEUE_LEN,
+                                    H.COUNTER_QUEUE_LEN)
+                    counters = counters.at[q, pos].set(out.counter_val,
+                                                       mode="drop")
+                    counter_count = counter_count.at[q].add(
+                        sel.sum().astype(jnp.int32))
+                return counters, counter_count
+
+            counters, counter_count = jax.lax.cond(
+                (out.counter_queue >= 0).any(), _push_counters,
+                lambda cc: cc, (counters, counter_count))
 
         # (6d) completion notification -> free packet-buffer slots
         alloc_state = palloc.free(alloc_state, addr, live)
@@ -233,10 +270,20 @@ class SpinNIC:
         new_state = NICState(
             l2=l2, alloc=alloc_state, mpq=mpq, msg_state=msg_state,
             host=host, counters=counters, counter_count=counter_count,
-            cycles=state.cycles + 1, dropped=dropped)
+            cycles=state.cycles + 1, dropped=dropped, expect=state.expect)
         return new_state, egress, to_host
 
     # ------------------------------------------------------------- host API
+    def write_expect(self, state: NICState, idx: int,
+                     msg_id: int) -> NICState:
+        """Host MMIO: arm (or disarm, msg_id=0) one slot of the expected
+        msg_id table — the host posts the receive to the NIC *before*
+        telling the sender to fire, so a recycled DMA region only accepts
+        frames of its current occupant."""
+        return dataclasses.replace(
+            state, expect=state.expect.at[idx].set(
+                jnp.uint32(msg_id)))
+
     def read_host(self, state: NICState, base: int, nbytes: int
                   ) -> np.ndarray:
         """Host read of the DMA window (the /dev/pspin0 mmap view)."""
@@ -251,6 +298,10 @@ class SpinNIC:
         again (a real FIFO drain, not a peek).
         """
         cnt = int(state.counter_count[queue])
+        if cnt == 0:
+            # nothing pushed since the last drain: skip the device
+            # round-trips (this runs after every non-idle fabric tick)
+            return np.zeros(0, np.int32), state
         vals = np.asarray(state.counters[queue])
         start = max(0, cnt - H.COUNTER_QUEUE_LEN)   # older entries overwritten
         drained = np.array([vals[(start + i) % H.COUNTER_QUEUE_LEN]

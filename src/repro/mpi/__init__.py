@@ -25,23 +25,28 @@ Quick taste::
         compute_something(); comm.progress()          # real overlap
     comm.waitall([r, s, h])
 """
-from repro.mpi.collectives import (ALLREDUCE_RD_MAX_BYTES,
-                                   ALLTOALL_BRUCK_MAX_BLOCK, CollRequest,
+from repro.mpi.collectives import (ALLREDUCE_RAB_MIN_BYTES,
+                                   ALLREDUCE_RD_MAX_BYTES,
+                                   ALLTOALL_BRUCK_MAX_BLOCK,
+                                   BCAST_PIPELINE_MIN_BYTES, CollRequest,
                                    allreduce, alltoall, alltoallv, barrier,
                                    bcast, iallreduce, ialltoall, ialltoallv,
                                    ibarrier, ibcast, ireduce, reduce)
 from repro.mpi.communicator import (COLL_TAG_BASE, BufferPool, Communicator,
-                                    MpiConfig, clear_nic_cache)
+                                    MpiConfig, PersistentRequest,
+                                    clear_nic_cache)
 from repro.mpi.datatypes import (COMMIT_COUNTERS, DatatypeRegistry,
                                  clear_commit_cache)
 from repro.mpi.engine import ANY_SOURCE, ANY_TAG, MpiHostEngine, Request
 from repro.mpi.wire import CTRL_PORT, DATA_PORT, EAGER_PORT
 
 __all__ = ["Communicator", "MpiConfig", "DatatypeRegistry", "MpiHostEngine",
-           "Request", "CollRequest", "BufferPool", "ANY_SOURCE", "ANY_TAG",
+           "Request", "CollRequest", "BufferPool", "PersistentRequest",
+           "ANY_SOURCE", "ANY_TAG",
            "bcast", "reduce", "allreduce", "alltoall", "alltoallv",
            "barrier", "ibcast", "ireduce", "iallreduce", "ialltoall",
            "ialltoallv", "ibarrier", "COLL_TAG_BASE",
-           "ALLREDUCE_RD_MAX_BYTES", "ALLTOALL_BRUCK_MAX_BLOCK",
+           "ALLREDUCE_RD_MAX_BYTES", "ALLREDUCE_RAB_MIN_BYTES",
+           "BCAST_PIPELINE_MIN_BYTES", "ALLTOALL_BRUCK_MAX_BLOCK",
            "COMMIT_COUNTERS", "clear_commit_cache", "clear_nic_cache",
            "EAGER_PORT", "DATA_PORT", "CTRL_PORT"]

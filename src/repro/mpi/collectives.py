@@ -19,17 +19,34 @@ snapshot left it.
 
 Algorithms (selected per message size when ``algorithm="auto"``):
 
-  bcast       binomial tree (⌈log₂ n⌉ rounds)
+  bcast       "binomial"   binomial tree (⌈log₂ n⌉ rounds)
+              "pipelined"  binomial tree over fixed-size segments — every
+                           relay forwards segment s the moment it lands,
+                           so the tree streams (⌈log₂ n⌉ + S − 1 rounds)
   reduce      binomial tree combine toward the root
   allreduce   "rd"     recursive doubling, non-power-of-two ranks folded
                        in by a pre/post exchange — ⌈log₂ n⌉ rounds
               "tree"   binomial reduce + binomial bcast (fewer messages)
+              "rab"    Rabenseifner: reduce-scatter (recursive halving)
+                       + allgather (recursive doubling) — each rank moves
+                       ~2·(n−1)/n vectors instead of ⌈log₂ n⌉, the
+                       bandwidth-optimal schedule for large vectors
               "linear" gather + fan-out at the root (n−1 rounds; the
                        baseline the log-step algorithms are measured
                        against)
   alltoall(v) "bruck"  store-and-forward, ⌈log₂ n⌉ rounds of ⌈n/2⌉
                        coalesced blocks (message-count optimal)
               "pairwise"  direct exchange, n−1 messages per rank
+
+**Large-message fast path.**  Any plan message larger than the eager
+staging slot is transparently *segmented*: the payload travels as
+committed contiguous chunks (``MpiConfig.coll_seg_bytes``) through the
+credit-managed rendezvous path, where the NIC's DDT-unpack context
+scatters each segment straight into the posted receive region — no
+staging-slot cap, and the segments of concurrent collectives pipeline
+against the receiver's slot credits.  Handles carry ``rounds`` /
+``msgs_total`` / ``bytes_wire`` so benchmarks can attribute wins to the
+schedule, not the wire.
 
 Reduction ``op`` must be commutative (np.add / np.maximum / ...): the
 log-step schedules combine partial results in rank-dependent order.
@@ -39,7 +56,7 @@ at/above ``COLL_TAG_BASE`` — keep user tags below it.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,9 +65,15 @@ from repro.mpi.engine import Request
 
 # ---- algorithm selection thresholds (bytes) ----
 # Recursive doubling sends the full vector every round; past this size the
-# lower-message-count tree wins.  Bruck coalesces ~n/2 blocks per send, so
-# it pays only while blocks are small (latency-bound regime).
+# lower-message-count tree wins.  Past ALLREDUCE_RAB_MIN_BYTES the
+# bandwidth term dominates and Rabenseifner's reduce-scatter+allgather
+# (2·(n−1)/n vectors on the wire per rank) beats both.  Bruck coalesces
+# ~n/2 blocks per send, so it pays only while blocks are small
+# (latency-bound regime).  Long broadcasts switch to the pipelined
+# segment tree at BCAST_PIPELINE_MIN_BYTES.
 ALLREDUCE_RD_MAX_BYTES = 32 * 1024
+ALLREDUCE_RAB_MIN_BYTES = 64 * 1024
+BCAST_PIPELINE_MIN_BYTES = 64 * 1024
 ALLTOALL_BRUCK_MAX_BLOCK = 4 * 1024
 
 # Reduction ops a checkpoint can name (plain-data snapshots store the
@@ -94,6 +117,50 @@ def _log2floor(n: int) -> int:
     return n.bit_length() - 1
 
 
+# rank <-> power-of-two participant mapping for the non-power-of-two fold
+# (MPICH scheme: the first 2·rem ranks collapse pairwise into rem
+# participants; even ranks sit out after handing their vector to the odd
+# neighbour and take the result back in a post phase)
+def _fold_newrank(r: int, rem: int) -> int:
+    if r < 2 * rem:
+        return -1 if r % 2 == 0 else r // 2
+    return r - rem
+
+
+def _fold_realrank(nr: int, rem: int) -> int:
+    return 2 * nr + 1 if nr < rem else nr + rem
+
+
+def _rab_schedule(nr: int, pof2: int, nelems: int) -> List[tuple]:
+    """Rabenseifner round schedule for participant ``nr``: reduce-scatter
+    by recursive halving, then allgather by recursive doubling in reverse.
+    Each entry is ``(phase, partner_nr, (send_lo, send_hi),
+    (recv_lo, recv_hi))`` in element offsets; partners always derive the
+    same split point (it depends only on the shared higher address bits),
+    so the ranges pair up exactly.  Ranges may be empty for tiny vectors."""
+    rounds: List[tuple] = []
+    hist: List[tuple] = []
+    lo, hi = 0, nelems
+    mask = pof2 >> 1
+    while mask >= 1:
+        pn = nr ^ mask
+        mid = lo + (hi - lo) // 2
+        if nr & mask:
+            snd, rcv = (lo, mid), (mid, hi)
+            lo = mid
+        else:
+            snd, rcv = (mid, hi), (lo, mid)
+            hi = mid
+        rounds.append(("rs", pn, snd, rcv))
+        hist.append((pn, snd, rcv))
+        mask >>= 1
+    # allgather walks the halving tree back up: send what this rank now
+    # owns fully reduced (the kept range), receive what it gave away
+    for pn, snd, rcv in reversed(hist):
+        rounds.append(("ag", pn, rcv, snd))
+    return rounds
+
+
 class CollRequest(Request):
     """Handle for a nonblocking collective: a :class:`Request` whose
     completion is the whole plan's; ``result`` carries the collective's
@@ -105,6 +172,9 @@ class CollRequest(Request):
         self.result = None
         self.rounds = 0              # sequential communication rounds
         self.msgs_total = 0          # point-to-point messages posted
+        self.bytes_wire = 0          # payload bytes put on the wire
+        #                              (incl. segment padding — what the
+        #                              fabric actually carries)
 
 
 # --------------------------------------------------------------- plan base
@@ -130,6 +200,11 @@ class Plan:
         self._depth = 0        # posting re-entrancy depth (self-sends can
         #                        complete synchronously mid-start/on_step)
         self.owned_bids: List[int] = []
+        # segmented-transport bookkeeping: base step key -> segments left,
+        # and per-segment receive key -> (target bid, scratch bid, byte
+        # offset, byte length) — all plain data, checkpoints with the plan
+        self._seg_left: Dict[tuple, int] = {}
+        self._seg_recv: Dict[tuple, tuple] = {}
         self.request = CollRequest(algorithm or self.NAME)
         self.request._comm = comm
 
@@ -155,16 +230,61 @@ class Plan:
     def _buf(self, bid: int) -> np.ndarray:
         return self.comm.pool.get(bid)
 
+    def _segmented(self, nbytes: int, a: int, b: int) -> bool:
+        """Sender and receiver must agree: a plan message is segmented iff
+        it exceeds the eager staging slot, the chunk datatype exists, and
+        the endpoints differ (self-delivery never touches a slot)."""
+        return (a != b and self.comm.seg_dtype is not None
+                and nbytes > self.comm.cfg.eager_slot_bytes)
+
     def _send(self, src: int, dest: int, data: np.ndarray, key: tuple,
               round_: int = 0) -> None:
-        req = self.comm.isend(src, dest, data, tag=self.tag_base + round_)
-        self._track(req, key)
+        data = np.ascontiguousarray(data)
+        nbytes = int(data.nbytes)
+        if not self._segmented(nbytes, src, dest):
+            if src != dest:
+                _check_eager_fit(self.comm, nbytes, "collective message")
+                self.request.bytes_wire += nbytes
+            req = self.comm.isend(src, dest, data,
+                                  tag=self.tag_base + round_)
+            self._track(req, key)
+            return
+        # large-message fast path: committed contiguous chunks through the
+        # credit-managed rendezvous, NIC-unpacked into the posted region
+        seg = self.comm.cfg.coll_seg_bytes
+        u8 = data.reshape(-1).view(np.uint8)
+        nseg = -(-nbytes // seg)
+        self._seg_left[key] = nseg
+        for i in range(nseg):
+            ln = min(seg, nbytes - i * seg)
+            chunk = np.zeros(seg, np.uint8)
+            chunk[:ln] = u8[i * seg:i * seg + ln]
+            req = self.comm.isend(src, dest, chunk,
+                                  tag=self.tag_base + round_,
+                                  datatype=self.comm.seg_dtype)
+            self._track(req, ("sg",) + key + (i,))
+            self.request.bytes_wire += seg
 
     def _recv(self, rank: int, bid: int, source: int, key: tuple,
               round_: int = 0) -> None:
-        req = self.comm.irecv(rank, self._buf(bid), source=source,
-                              tag=self.tag_base + round_, buf_id=bid)
-        self._track(req, key)
+        buf = self._buf(bid)
+        nbytes = int(buf.nbytes)
+        if not self._segmented(nbytes, rank, source):
+            req = self.comm.irecv(rank, buf, source=source,
+                                  tag=self.tag_base + round_, buf_id=bid)
+            self._track(req, key)
+            return
+        seg = self.comm.cfg.coll_seg_bytes
+        nseg = -(-nbytes // seg)
+        self._seg_left[key] = nseg
+        for i in range(nseg):
+            ln = min(seg, nbytes - i * seg)
+            sbid = self._adopt(np.zeros(seg, np.uint8))
+            skey = ("rg",) + key + (i,)
+            self._seg_recv[skey] = (bid, sbid, i * seg, ln)
+            req = self.comm.irecv(rank, self._buf(sbid), source=source,
+                                  tag=self.tag_base + round_, buf_id=sbid)
+            self._track(req, skey)
 
     def _track(self, req: Request, key: tuple) -> None:
         assert key not in self.pending, f"duplicate plan step {key}"
@@ -181,16 +301,38 @@ class Plan:
         if req.error:
             self._abort(req.error)
             return
-        self._depth += 1
-        try:
-            self.on_step(key, req)
-        finally:
-            self._depth -= 1
+        deliver = True
+        if key[0] in ("sg", "rg"):
+            key = self._seg_step(key)
+            deliver = key is not None
+        if deliver:
+            self._depth += 1
+            try:
+                self.on_step(key, req)
+            finally:
+                self._depth -= 1
         # drain only at depth 0: a synchronously-completing self-send must
         # not finish the plan while an outer start()/on_step() is still
         # posting the rest of its wave
         if not self.pending and not self.finished and self._depth == 0:
             self.on_drain()
+
+    def _seg_step(self, key: tuple) -> Optional[tuple]:
+        """One segment of a segmented plan message completed: land receive
+        chunks in the target buffer; when the last segment of the base
+        step drains, return the base key for on_step dispatch."""
+        base = tuple(key[1:-1])
+        if key[0] == "rg":
+            tbid, sbid, off, ln = self._seg_recv.pop(key)
+            tview = self._buf(tbid).reshape(-1).view(np.uint8)
+            tview[off:off + ln] = self._buf(sbid)[:ln]
+            self.comm.pool.release(sbid)
+        left = self._seg_left[base] - 1
+        if left:
+            self._seg_left[base] = left
+            return None
+        del self._seg_left[base]
+        return base
 
     def _abort(self, err: str) -> None:
         self.finished = True
@@ -213,8 +355,11 @@ class Plan:
                     algorithm=self.request.algorithm,
                     rounds=self.request.rounds,
                     msgs_total=self.request.msgs_total,
+                    bytes_wire=self.request.bytes_wire,
                     pending=sorted(self.pending),
                     owned_bids=list(self.owned_bids),
+                    seg_left=sorted(self._seg_left.items()),
+                    seg_recv=sorted(self._seg_recv.items()),
                     state=self._snap_state())
 
     @classmethod
@@ -225,8 +370,12 @@ class Plan:
                       algorithm=snap["algorithm"])
         plan.request.rounds = snap["rounds"]
         plan.request.msgs_total = snap["msgs_total"]
+        plan.request.bytes_wire = snap["bytes_wire"]
         plan.pending = set(tuple(k) for k in snap["pending"])
         plan.owned_bids = list(snap["owned_bids"])
+        plan._seg_left = {tuple(k): v for k, v in snap["seg_left"]}
+        plan._seg_recv = {tuple(k): tuple(v)
+                          for k, v in snap["seg_recv"]}
         plan._restore_state(snap["state"])
         return plan
 
@@ -280,15 +429,112 @@ class BcastPlan(Plan):
         self.n, self.root, self.bids = s["n"], s["root"], list(s["bids"])
 
 
+class BcastPipelinedPlan(Plan):
+    """Pipelined-segment binomial-tree broadcast for long messages: the
+    payload is cut into ``MpiConfig.coll_seg_bytes`` segments, each relay
+    forwards segment ``s`` to its children the moment it lands (distinct
+    tag per segment, so segments overtake freely), and every segment
+    travels as one committed chunk over the credit-managed rendezvous —
+    the tree streams instead of storing-and-forwarding the whole vector:
+    ⌈log₂ n⌉ + S − 1 pipeline rounds instead of ⌈log₂ n⌉ · S.
+    """
+
+    NAME = "bcast_pipelined"
+
+    def __init__(self, comm, pid, tag_base, bufs: Sequence[np.ndarray],
+                 root: int = 0):
+        super().__init__(comm, pid, tag_base)
+        assert comm.seg_dtype is not None, (
+            "pipelined bcast needs the collective segment datatype "
+            "(MpiConfig.coll_seg_bytes > 0, unfrozen registry)")
+        self.n = comm.n_ranks
+        self.root = root
+        self.bids = [self._adopt(np.ascontiguousarray(b)) for b in bufs]
+        self.nbytes = int(self._buf(self.bids[root]).nbytes)
+        self.seg = comm.cfg.coll_seg_bytes
+        self.nseg = max(1, -(-self.nbytes // self.seg))
+        from repro.mpi.communicator import _PLAN_TAG_SPAN
+        assert self.nseg <= _PLAN_TAG_SPAN, (
+            f"{self.nseg} segments exceed the plan tag block "
+            f"({_PLAN_TAG_SPAN}) — raise MpiConfig.coll_seg_bytes")
+        self.scratch: Dict[tuple, int] = {}      # (rank, seg) -> bid
+        self.request.rounds = max(1, self.n - 1).bit_length() \
+            + self.nseg - 1
+
+    def _seg_span(self, s: int) -> Tuple[int, int]:
+        off = s * self.seg
+        return off, min(self.seg, self.nbytes - off)
+
+    def start(self) -> None:
+        for r in range(self.n):
+            v = _vrank(r, self.root, self.n)
+            if v == 0:
+                for s in range(self.nseg):
+                    self._fan_seg(r, s)
+            else:
+                parent = _prank(_parent(v), self.root, self.n)
+                for s in range(self.nseg):
+                    sbid = self._adopt(np.zeros(self.seg, np.uint8))
+                    self.scratch[(r, s)] = sbid
+                    req = self.comm.irecv(r, self._buf(sbid),
+                                          source=parent,
+                                          tag=self.tag_base + s,
+                                          buf_id=sbid)
+                    self._track(req, ("pr", r, s))
+
+    def _fan_seg(self, r: int, s: int) -> None:
+        v = _vrank(r, self.root, self.n)
+        children = _children(v, self.n)
+        if not children:
+            return
+        off, ln = self._seg_span(s)
+        u8 = self._buf(self.bids[r]).reshape(-1).view(np.uint8)
+        chunk = np.zeros(self.seg, np.uint8)
+        chunk[:ln] = u8[off:off + ln]
+        for c in children:
+            req = self.comm.isend(r, _prank(c, self.root, self.n), chunk,
+                                  tag=self.tag_base + s,
+                                  datatype=self.comm.seg_dtype)
+            self._track(req, ("ps", r, c, s))
+            self.request.bytes_wire += self.seg
+
+    def on_step(self, key, req) -> None:
+        if key[0] != "pr":
+            return
+        _, r, s = key
+        sbid = self.scratch.pop((r, s))
+        off, ln = self._seg_span(s)
+        u8 = self._buf(self.bids[r]).reshape(-1).view(np.uint8)
+        u8[off:off + ln] = self._buf(sbid)[:ln]
+        self.comm.pool.release(sbid)
+        self._fan_seg(r, s)
+
+    def result(self):
+        return [self._buf(b) for b in self.bids]
+
+    def _snap_state(self):
+        return dict(n=self.n, root=self.root, bids=list(self.bids),
+                    nbytes=self.nbytes, seg=self.seg, nseg=self.nseg,
+                    scratch=sorted(self.scratch.items()))
+
+    def _restore_state(self, s):
+        self.n, self.root = s["n"], s["root"]
+        self.bids = list(s["bids"])
+        self.nbytes, self.seg, self.nseg = s["nbytes"], s["seg"], s["nseg"]
+        self.scratch = {tuple(k): v for k, v in s["scratch"]}
+
+
 def _check_eager_fit(comm: Communicator, nbytes: int, what: str) -> None:
-    """Collectives ship raw bytes through the eager path, so the largest
-    single message must fit a staging slot — fail at post time with an
-    actionable message instead of deep inside the engine."""
+    """Only reachable when segmentation is unavailable (a frozen registry
+    without the chunk type, or ``coll_seg_bytes=0``): unsegmented plan
+    messages ship raw bytes through the eager path and must fit a staging
+    slot — fail at post time with an actionable message."""
     assert nbytes <= comm.cfg.eager_slot_bytes, (
         f"{what} of {nbytes}B exceeds the {comm.cfg.eager_slot_bytes}B "
-        f"eager staging slot — collectives send untyped eager messages; "
-        f"raise MpiConfig.eager_slot_bytes (segmented large-vector "
-        f"collectives are a ROADMAP item)")
+        f"eager staging slot and the communicator has no collective "
+        f"segment datatype (frozen registry without '__coll_seg__', or "
+        f"MpiConfig.coll_seg_bytes=0) — enable segmentation or raise "
+        f"eager_slot_bytes")
 
 
 # ------------------------------------------------------- binomial reduce
@@ -458,12 +704,10 @@ class AllreduceRDPlan(Plan, _ReduceState):
 
     # rank <-> recursive-doubling participant mapping (MPICH scheme)
     def _newrank(self, r: int) -> int:
-        if r < 2 * self.rem:
-            return -1 if r % 2 == 0 else r // 2
-        return r - self.rem
+        return _fold_newrank(r, self.rem)
 
     def _realrank(self, nr: int) -> int:
-        return 2 * nr + 1 if nr < self.rem else nr + self.rem
+        return _fold_realrank(nr, self.rem)
 
     def start(self) -> None:
         post_round = 1 + self.nrounds
@@ -520,6 +764,120 @@ class AllreduceRDPlan(Plan, _ReduceState):
         self.pof2 = 1 << _log2floor(self.n)
         self.rem = self.n - self.pof2
         self.nrounds = _log2floor(self.pof2)
+
+
+class AllreduceRabenseifnerPlan(Plan, _ReduceState):
+    """Rabenseifner's allreduce: reduce-scatter by recursive halving, then
+    allgather by recursive doubling — ⌈log₂ n⌉ + ⌈log₂ n⌉ rounds moving
+    only ~2·(n−1)/n of the vector per rank, the bandwidth-optimal schedule
+    for the large reductions that dominate a data-parallel training step.
+    Non-power-of-two rank counts fold the first ``2·rem`` ranks pairwise
+    into ``pof2`` participants (full-vector pre/post exchange, as in the
+    recursive-doubling plan).  Every half-vector message above the eager
+    slot rides the segmented rendezvous fast path.
+    """
+
+    NAME = "allreduce_rab"
+
+    def __init__(self, comm, pid, tag_base, sendbufs, op=np.add):
+        super().__init__(comm, pid, tag_base)
+        self.n = comm.n_ranks
+        self._init_reduce_state(sendbufs, op)
+        self.nelems = int(self._buf(self.acc_bids[0]).size)
+        self._derive()
+        self.ridx = [0] * self.n      # per-rank position in its schedule
+        self.scratch = [-1] * self.n  # per-rank in-flight recv buffer
+        self.request.rounds = 2 * self.nrounds + (2 if self.rem else 0)
+
+    def _derive(self) -> None:
+        self.pof2 = 1 << _log2floor(self.n)
+        self.rem = self.n - self.pof2
+        self.nrounds = _log2floor(self.pof2)
+        self.post_round = 1 + 2 * self.nrounds
+        self._scheds: Dict[int, List[tuple]] = {}
+
+    def _sched(self, r: int) -> List[tuple]:
+        s = self._scheds.get(r)
+        if s is None:
+            nr = _fold_newrank(r, self.rem)
+            assert nr >= 0
+            s = self._scheds[r] = _rab_schedule(nr, self.pof2, self.nelems)
+        return s
+
+    def start(self) -> None:
+        for r in range(self.n):
+            if self.rem and r < 2 * self.rem:
+                if r % 2 == 0:
+                    # fold into the odd neighbour; the final vector comes
+                    # back in the post phase (recv posted now)
+                    self._send(r, r + 1, self._buf(self.acc_bids[r]),
+                               key=("fps", r), round_=0)
+                    self._recv(r, self.acc_bids[r], source=r + 1,
+                               key=("por", r), round_=self.post_round)
+                else:
+                    self._recv(r, self.tmp_bids[r], source=r - 1,
+                               key=("fpr", r), round_=0)
+            else:
+                self._kick(r)
+
+    def _kick(self, r: int) -> None:
+        """Advance rank ``r`` through its schedule: post the round's send
+        and receive; rounds whose receive range is empty (vectors shorter
+        than pof2) complete immediately."""
+        sched = self._sched(r)
+        flat = self._buf(self.acc_bids[r]).reshape(-1)
+        while self.ridx[r] < len(sched):
+            k = self.ridx[r]
+            _, pn, (slo, shi), (rlo, rhi) = sched[k]
+            partner = _fold_realrank(pn, self.rem)
+            if shi > slo:
+                self._send(r, partner, flat[slo:shi], key=("ks", r, k),
+                           round_=1 + k)
+            if rhi > rlo:
+                sbid = self._adopt(np.empty(rhi - rlo, flat.dtype))
+                self.scratch[r] = sbid
+                self._recv(r, sbid, source=partner, key=("kr", r, k),
+                           round_=1 + k)
+                return
+            self.ridx[r] = k + 1
+        if self.rem and r < 2 * self.rem:
+            # odd fold rank hands the full result back to its even partner
+            self._send(r, r - 1, self._buf(self.acc_bids[r]),
+                       key=("pos", r), round_=self.post_round)
+
+    def on_step(self, key, req) -> None:
+        kind, r = key[0], key[1]
+        if kind == "fpr":
+            acc = self._buf(self.acc_bids[r])
+            acc[...] = self._op(acc, self._buf(self.tmp_bids[r]))
+            self._kick(r)
+        elif kind == "kr":
+            k = key[2]
+            phase, _, _, (rlo, rhi) = self._sched(r)[k]
+            flat = self._buf(self.acc_bids[r]).reshape(-1)
+            data = self._buf(self.scratch[r])
+            if phase == "rs":
+                flat[rlo:rhi] = self._op(flat[rlo:rhi], data)
+            else:
+                flat[rlo:rhi] = data
+            self.comm.pool.release(self.scratch[r])
+            self.scratch[r] = -1
+            self.ridx[r] = k + 1
+            self._kick(r)
+
+    def result(self):
+        return [self._buf(b) for b in self.acc_bids]
+
+    def _snap_state(self):
+        return dict(self._snap_reduce_state(), nelems=self.nelems,
+                    ridx=list(self.ridx), scratch=list(self.scratch))
+
+    def _restore_state(self, s):
+        self._restore_reduce_state(s)
+        self.nelems = s["nelems"]
+        self._derive()
+        self.ridx = list(s["ridx"])
+        self.scratch = list(s["scratch"])
 
 
 class AllreduceLinearPlan(Plan, _ReduceState):
@@ -739,8 +1097,9 @@ class AlltoallBruckPlan(_ExchangeResult, Plan):
 
 
 PLAN_TYPES: Dict[str, type] = {
-    p.NAME: p for p in (BcastPlan, ReducePlan, AllreduceTreePlan,
-                        AllreduceRDPlan, AllreduceLinearPlan,
+    p.NAME: p for p in (BcastPlan, BcastPipelinedPlan, ReducePlan,
+                        AllreduceTreePlan, AllreduceRDPlan,
+                        AllreduceRabenseifnerPlan, AllreduceLinearPlan,
                         AlltoallPairwisePlan, AlltoallBruckPlan)
 }
 
@@ -761,20 +1120,25 @@ def _start(comm: Communicator, cls, *args, **kw) -> CollRequest:
 
 
 def ibcast(comm: Communicator, bufs: Sequence[np.ndarray],
-           root: int = 0) -> CollRequest:
+           root: int = 0, algorithm: str = "auto") -> CollRequest:
     """Nonblocking broadcast of ``bufs[root]`` into every ``bufs[r]``
-    (in place); ``result`` is the buffer list."""
-    _check_eager_fit(comm, int(np.ascontiguousarray(bufs[root]).nbytes),
-                     "bcast buffer")
-    return _start(comm, BcastPlan, bufs, root)
+    (in place); ``result`` is the buffer list.  ``algorithm``:
+    "binomial", "pipelined" (segment-streaming tree for long messages),
+    or "auto" by message size."""
+    nbytes = int(np.ascontiguousarray(bufs[root]).nbytes)
+    if algorithm == "auto":
+        algorithm = "pipelined" if (nbytes >= BCAST_PIPELINE_MIN_BYTES
+                                    and comm.seg_dtype is not None) \
+            else "binomial"
+    cls = {"binomial": BcastPlan,
+           "pipelined": BcastPipelinedPlan}[algorithm]
+    return _start(comm, cls, bufs, root)
 
 
 def ireduce(comm: Communicator, sendbufs: Sequence[np.ndarray],
             root: int = 0, op: Callable = np.add) -> CollRequest:
     """Nonblocking reduce toward ``root``; ``result`` is the combined
     array (meaningful at the root, like MPI_Reduce)."""
-    _check_eager_fit(comm, int(np.ascontiguousarray(sendbufs[0]).nbytes),
-                     "reduce vector")
     return _start(comm, ReducePlan, sendbufs, root, op)
 
 
@@ -783,12 +1147,18 @@ def iallreduce(comm: Communicator, sendbufs: Sequence[np.ndarray],
                algorithm: str = "auto") -> CollRequest:
     """Nonblocking allreduce; ``result`` is the per-rank output list.
     ``algorithm``: "rd" (recursive doubling), "tree" (reduce+bcast),
-    "linear" (baseline), or "auto" by message size."""
+    "rab" (Rabenseifner reduce-scatter+allgather, the large-vector
+    bandwidth winner), "linear" (baseline), or "auto" by message size."""
     nbytes = int(np.ascontiguousarray(sendbufs[0]).nbytes)
-    _check_eager_fit(comm, nbytes, "allreduce vector")
     if algorithm == "auto":
-        algorithm = "rd" if nbytes <= ALLREDUCE_RD_MAX_BYTES else "tree"
+        if nbytes <= ALLREDUCE_RD_MAX_BYTES:
+            algorithm = "rd"
+        elif nbytes < ALLREDUCE_RAB_MIN_BYTES or comm.seg_dtype is None:
+            algorithm = "tree"
+        else:
+            algorithm = "rab"
     cls = {"rd": AllreduceRDPlan, "tree": AllreduceTreePlan,
+           "rab": AllreduceRabenseifnerPlan,
            "linear": AllreduceLinearPlan}[algorithm]
     return _start(comm, cls, sendbufs, op)
 
@@ -824,7 +1194,6 @@ def _pick_a2a(comm, blocks, algorithm: str):
     n = comm.n_ranks
     max_block = max((int(np.ascontiguousarray(b).nbytes)
                      for row in blocks for b in row), default=0)
-    _check_eager_fit(comm, max_block, "alltoall block")
     if algorithm == "auto":
         # Bruck coalesces ~n/2 blocks per message; keep the coalesced
         # payload inside the eager staging slot with room to spare
@@ -846,9 +1215,10 @@ def ibarrier(comm: Communicator) -> CollRequest:
 
 # ------------------------------------------------------- blocking wrappers
 def bcast(comm: Communicator, bufs: Sequence[np.ndarray], root: int = 0,
-          max_ticks: int = 200_000) -> None:
+          max_ticks: int = 200_000, algorithm: str = "auto") -> None:
     """Broadcast ``bufs[root]`` into every rank's ``bufs[r]`` (in place)."""
-    comm.wait(ibcast(comm, bufs, root=root), max_ticks=max_ticks)
+    comm.wait(ibcast(comm, bufs, root=root, algorithm=algorithm),
+              max_ticks=max_ticks)
 
 
 def reduce(comm: Communicator, sendbufs: Sequence[np.ndarray],

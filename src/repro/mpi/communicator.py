@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import apps
+from repro.core import ddt as ddtlib
 from repro.core import packet as pkt
 from repro.core import spin_nic
 from repro.mpi import wire
@@ -40,9 +41,10 @@ from repro.mpi.engine import (ANY_SOURCE, ANY_TAG, MpiHostEngine, MpiParams,
 from repro.net import Fabric, LinkConfig, Node
 
 # Collectives reserve tags at/above this — keep user tags below it.  Each
-# plan owns a block of _PLAN_TAG_SPAN tags (one per algorithm round).
+# plan owns a block of _PLAN_TAG_SPAN tags (one per algorithm round, or
+# one per pipeline segment for the segmented long-message algorithms).
 COLL_TAG_BASE = 1 << 20
-_PLAN_TAG_SPAN = 256
+_PLAN_TAG_SPAN = 4096
 _PLAN_TAG_SLOTS = 4096
 
 
@@ -62,6 +64,12 @@ class MpiConfig:
     ctl_timeout: int = 16
     ctl_max_retries: int = 400
     batch: int = 16                  # NIC ingress batch per tick
+    coll_seg_bytes: int = 16384      # segment size of the large-message
+    #                                  collective fast path: vectors above
+    #                                  the eager slot travel as committed
+    #                                  contiguous chunks of this size over
+    #                                  the credit-managed rendezvous path
+    #                                  (0 disables segmentation)
 
 
 class BufferPool:
@@ -114,6 +122,49 @@ def clear_nic_cache() -> None:
     _NIC_CACHE.clear()
 
 
+class PersistentRequest:
+    """A reusable operation binding (MPI_Send_init / MPI_Recv_init).
+
+    ``start()`` posts a fresh :class:`Request` for the bound buffer each
+    time it is called; the datatype was resolved to its committed id at
+    init time, so repeated ``start()`` calls touch neither the commit
+    cache nor the NIC context cache (guarded by a regression test).  The
+    buffer is bound by reference — like MPI, the caller refills it
+    between ``start()`` calls.
+    """
+
+    def __init__(self, comm: "Communicator", kind: str, rank: int,
+                 buf: np.ndarray, peer: int, tag: int,
+                 dtype_id: Optional[int]):
+        self.comm = comm
+        self.kind = kind                  # "send" | "recv"
+        self.rank = rank
+        self.buf = buf
+        self.peer = peer                  # dest (send) / source (recv)
+        self.tag = tag
+        self.dtype_id = dtype_id
+        self.active: Optional[Request] = None
+        self.starts = 0
+
+    def start(self) -> Request:
+        assert self.active is None or self.active.done, \
+            "persistent request restarted while still in flight"
+        self.starts += 1
+        if self.kind == "send":
+            req = self.comm.isend(self.rank, self.peer, self.buf,
+                                  tag=self.tag, datatype=self.dtype_id)
+        else:
+            req = self.comm.irecv(self.rank, self.buf, source=self.peer,
+                                  tag=self.tag)
+        self.active = req
+        return req
+
+    def wait(self, max_ticks: int = 100_000) -> Request:
+        assert self.active is not None, "start() before wait()"
+        self.comm.wait(self.active, max_ticks=max_ticks)
+        return self.active
+
+
 class Communicator:
     def __init__(self, n_ranks: int,
                  registry: Optional[DatatypeRegistry] = None,
@@ -125,6 +176,21 @@ class Communicator:
         self.cfg = cfg
         self.registry = registry if registry is not None \
             else DatatypeRegistry()
+        # the large-message collective fast path ships vector segments as
+        # committed contiguous chunks through the rendezvous path (NIC
+        # unpacks them straight into the destination region) — register
+        # the chunk type before the registry freezes so the NIC table has
+        # it.  A frozen registry that already carries it is reused; a
+        # frozen registry without it disables segmentation.
+        self.seg_dtype: Optional[int] = None
+        if cfg.coll_seg_bytes:
+            seg_ddt = ddtlib.Contiguous(cfg.coll_seg_bytes, ddtlib.MPI_BYTE)
+            try:
+                self.seg_dtype = self.registry.resolve(seg_ddt)
+            except KeyError:
+                if not self.registry._frozen:
+                    self.seg_dtype = self.registry.register(
+                        seg_ddt, name="__coll_seg__")
         self.registry.freeze()
 
         macs = tuple(pkt.node_mac(r) for r in range(n_ranks))
@@ -233,6 +299,31 @@ class Communicator:
                                        buf_id=buf_id)
         req._comm = self
         return req
+
+    # -------------------------------------------------- persistent requests
+    def send_init(self, src: int, dest: int, data: np.ndarray,
+                  tag: int = 0, datatype=None) -> "PersistentRequest":
+        """MPI_Send_init: bind (buffer, peer, tag, datatype) once; every
+        :meth:`PersistentRequest.start` posts a fresh transfer reusing the
+        committed datatype plan (resolved here, once) and the job-cached
+        NIC contexts — no recommit, no re-upload, no registry lookup on
+        the per-iteration path."""
+        dtype_id = None if datatype is None \
+            else self.registry.resolve(datatype)
+        return PersistentRequest(self, "send", src, data, dest, tag,
+                                 dtype_id)
+
+    def recv_init(self, rank: int, buf: np.ndarray,
+                  source: int = ANY_SOURCE,
+                  tag: int = ANY_TAG) -> "PersistentRequest":
+        """MPI_Recv_init: the receive-side half of a persistent pair."""
+        return PersistentRequest(self, "recv", rank, buf, source, tag,
+                                 None)
+
+    def start_all(self, preqs: Sequence["PersistentRequest"]
+                  ) -> List[Request]:
+        """MPI_Startall over persistent handles."""
+        return [p.start() for p in preqs]
 
     def send(self, src: int, dest: int, data: np.ndarray, tag: int = 0,
              datatype=None, max_ticks: int = 100_000) -> Request:

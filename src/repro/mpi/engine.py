@@ -13,11 +13,30 @@ and implements the host half of the messaging layer:
     (sent once every segment is ACKed, so the data is known to be in host
     memory) carries the envelope and triggers matching;
   * **rendezvous protocol** (registered datatypes at/above the eager
-    threshold): RTS → match → CTS (carrying a receive slot) → SLMP data to
-    the NIC *DDT-unpack* context — the receive-side datatype processing
-    runs entirely on the NIC, scattering payload bytes through the
-    committed index map into the posted region — → FIN completes the
-    receive with a masked copy-out (no host unpack on the critical path).
+    threshold): RTS → match → CTS (carrying a receive slot *and a credit
+    count*) → SLMP data to the NIC *DDT-unpack* context — the receive-side
+    datatype processing runs entirely on the NIC, scattering payload bytes
+    through the committed index map into the posted region — → FIN
+    completes the receive with a masked copy-out (no host unpack on the
+    critical path).
+
+**Credit-managed rendezvous.** Receive slots are *credits*: the receiver
+owns ``n_rdv_slots`` leases, debits one per CTS, and returns it the
+moment the FIN lands — no time-based quarantine.  Safe reuse is
+end-to-end, not clock-based: each grant hands out a *generation-tagged*
+virtual slot and arms the NIC's expected-msg_id table
+(:meth:`~repro.net.node.Node.write_expect`) before the CTS leaves, so a
+stale retransmit of a previous occupant — even one that sat queued in a
+congested link arbitrarily long — is dropped on the device instead of
+scribbling the recycled region.  Every CTS carries the receiver's
+remaining credit, and the sender pipelines its queued rendezvous sends
+per destination against that window (at least one RTS is always
+outstanding as a probe, so a collapsed window reopens as soon as a grant
+arrives).  K concurrent segmented collectives therefore share the slot
+pool by grant order without deadlock and without flooding the control
+wire with RTSs that cannot be granted: ``credit_stalls`` (receiver had a
+matched RTS but no lease) and ``window_stalls`` (sender held an RTS
+back) in :attr:`stats` show where the pipeline throttles.
 
 All control traffic uses the reliable :class:`~repro.mpi.wire.CtlEndpoint`;
 all bulk data uses SLMP retransmission — the whole layer survives loss,
@@ -64,7 +83,9 @@ class MpiParams:
     n_rdv_slots: int
     rdv_region_bytes: int
     rdv_base: int
-    slot_quarantine: int          # ticks before a freed rdv slot is reusable
+    slot_quarantine: int          # ticks before a freed *eager* staging
+    #                               slot is reusable (rdv slots recycle
+    #                               instantly via the expect table)
     mtu_payload: int
     slmp_window: int
     slmp_timeout: int
@@ -194,6 +215,12 @@ class MpiHostEngine(HostEngine):
         # still be in flight right after its FIN is acked
         self._eager_cooldown: Dict[Tuple[int, int], int] = {}
         self._rdv_sends: Dict[Tuple[int, int], dict] = {}
+        # credit-window RTS pipeline: queued rendezvous sends per dest,
+        # the per-dest window learned from CTS credits, and the number of
+        # transfers between RTS and FIN-ack per dest
+        self._rdv_queue: Dict[int, Deque[dict]] = {}
+        self._rdv_window: Dict[int, int] = {}
+        self._rdv_outstanding: Dict[int, int] = {}
         self._active: List[dict] = []           # live SLMP data senders
         # ---- receive side
         self._posted: List[Request] = []
@@ -203,13 +230,19 @@ class MpiHostEngine(HostEngine):
         # earlier eager message's FIN onto the wire
         self._mseq_rx: Dict[int, int] = {}
         self._mseq_pending: Dict[int, Dict[int, _Envelope]] = {}
-        self._rdv_recv: Dict[int, Tuple[int, wire.Ctl]] = {}   # slot -> rid
+        self._rdv_recv: Dict[int, Tuple[int, wire.Ctl]] = {}   # vslot -> rid
         self._free_slots: List[int] = list(range(params.n_rdv_slots))
-        self._quarantine: Deque[Tuple[int, int]] = deque()
+        # per-physical-slot generation: the CTS hands out the *virtual*
+        # slot gen·n_slots+phys, the NIC is armed with the full expected
+        # msg_id, and stale frames of earlier generations are dropped on
+        # the device — so a FIN'd slot recycles immediately (no time-based
+        # quarantine on the rendezvous path)
+        self._slot_gen: List[int] = [0] * params.n_rdv_slots
         self._cts_waiting: Deque[Tuple[int, wire.Ctl]] = deque()  # (rid, rts)
         # ---- accounting
         self.stats = dict(eager_sent=0, rdv_sent=0, bytes_sent=0,
-                          bytes_recv=0, unexpected=0, retransmits=0)
+                          bytes_recv=0, unexpected=0, retransmits=0,
+                          credit_stalls=0, window_stalls=0)
         self.errors: List[str] = []
 
     def attach(self, node) -> None:
@@ -260,7 +293,10 @@ class MpiHostEngine(HostEngine):
         use_rdv = (dtype_id != wire.NO_DTYPE
                    and payload.size >= self.p.eager_threshold)
         if use_rdv:
-            self._start_rdv_send(req, dest, payload, dtype_id, tag, mseq)
+            self._rdv_queue.setdefault(dest, deque()).append(dict(
+                rid=req.rid, dest=dest, payload=payload,
+                dtype_id=dtype_id, tag=tag, mseq=mseq))
+            self._pump_rdv(dest)
         else:
             assert payload.size <= self.p.eager_slot_bytes, (
                 f"eager message of {payload.size}B exceeds the "
@@ -291,6 +327,7 @@ class MpiHostEngine(HostEngine):
     def done(self) -> bool:
         return not (any(self._eager_queue.values())
                     or any(self._eager_inflight.values())
+                    or any(self._rdv_queue.values())
                     or self._rdv_sends or self._active
                     or self._cts_waiting or not self.ctl.idle)
 
@@ -377,19 +414,34 @@ class MpiHostEngine(HostEngine):
         self._active.append(dict(ent, kind="eager", slot=slot,
                                  msg_id=msg_id, sender=sender))
 
-    def _start_rdv_send(self, req: Request, dest: int, payload: np.ndarray,
-                        dtype_id: int, tag: int, mseq: int) -> None:
-        seq = self._msg_seq.get(dest, 0)
-        self._msg_seq[dest] = seq + 1
-        self._rdv_sends[(dest, seq)] = dict(
-            rid=req.rid, dest=dest, seq=seq, payload=payload,
-            dtype_id=dtype_id, tag=tag)
-        self.stats["rdv_sent"] += 1
-        self.ctl.send(dest, wire.Ctl(wire.RTS, src=self.rank, tag=tag,
-                                     seq=seq, nbytes=payload.size,
-                                     dtype_id=dtype_id, mseq=mseq))
+    def _pump_rdv(self, dest: int) -> None:
+        """Launch queued rendezvous sends up to the destination's credit
+        window (RTS pipelining: always at least one outstanding probe)."""
+        queue = self._rdv_queue.get(dest)
+        if not queue:
+            return
+        window = max(1, self._rdv_window.get(dest, 1))
+        while queue and self._rdv_outstanding.get(dest, 0) < window:
+            ent = queue.popleft()
+            seq = self._msg_seq.get(dest, 0)
+            self._msg_seq[dest] = seq + 1
+            ent["seq"] = seq
+            self._rdv_sends[(dest, seq)] = ent
+            self._rdv_outstanding[dest] = \
+                self._rdv_outstanding.get(dest, 0) + 1
+            self.stats["rdv_sent"] += 1
+            self.ctl.send(dest, wire.Ctl(
+                wire.RTS, src=self.rank, tag=ent["tag"], seq=seq,
+                nbytes=ent["payload"].size, dtype_id=ent["dtype_id"],
+                mseq=ent["mseq"]))
+        if queue:
+            self.stats["window_stalls"] += 1
 
     def _on_cts(self, ctl: wire.Ctl) -> None:
+        # the grant carries the receiver's remaining credit: resize the
+        # RTS pipeline window toward it (the granted transfer itself is
+        # still outstanding, hence the +1)
+        self._rdv_window[ctl.src] = max(1, ctl.credit + 1)
         ent = self._rdv_sends.pop((ctl.src, ctl.seq), None)
         if ent is None:
             return                              # stale duplicate
@@ -399,6 +451,7 @@ class MpiHostEngine(HostEngine):
                                  self._slmp_cfg(ent["dest"], wire.DATA_PORT))
         self._active.append(dict(ent, kind="rdv", slot=ctl.slot, mseq=0,
                                  msg_id=msg_id, sender=sender))
+        self._pump_rdv(ctl.src)
 
     def _sender_done(self, ent: dict) -> None:
         """An SLMP data transfer fully ACKed: send the FIN whose ack token
@@ -414,7 +467,7 @@ class MpiHostEngine(HostEngine):
             fin = wire.Ctl(wire.FIN_RDV, src=self.rank, tag=ent["tag"],
                            seq=ent["seq"], nbytes=nbytes,
                            dtype_id=ent["dtype_id"], slot=ent["slot"])
-            token = ("rdvfin", ent["rid"], nbytes)
+            token = ("rdvfin", ent["rid"], nbytes, ent["dest"])
         self.ctl.send(ent["dest"], fin, token=token)
 
     def _on_tok_acked(self, tok: tuple) -> None:
@@ -426,8 +479,11 @@ class MpiHostEngine(HostEngine):
                 = self._now + self.p.slot_quarantine
             self._complete_rid(rid, nbytes=nbytes)
         elif tok[0] == "rdvfin":
-            _, rid, nbytes = tok
+            _, rid, nbytes, dest = tok
+            self._rdv_outstanding[dest] = \
+                max(0, self._rdv_outstanding.get(dest, 0) - 1)
             self._complete_rid(rid, nbytes=nbytes)
+            self._pump_rdv(dest)
 
     # ------------------------------------------------------- receive paths
     def _on_ctl_give_up(self, dst: int, body: wire.Ctl) -> None:
@@ -504,26 +560,33 @@ class MpiHostEngine(HostEngine):
         self._complete_req(req, source=ctl.src, tag=ctl.tag,
                            nbytes=ctl.nbytes)
 
-    # --- rendezvous receive
+    # --- rendezvous receive (credit-managed, generation-armed slots)
     def _slot_available(self) -> bool:
-        while self._quarantine and \
-                self._now - self._quarantine[0][1] >= self.p.slot_quarantine:
-            self._free_slots.append(self._quarantine.popleft()[0])
         return bool(self._free_slots)
 
     def _grant_rdv(self, req: Request, ctl: wire.Ctl) -> None:
         if not self._slot_available():
+            # no lease: the grant queues until a slot FINs
+            self.stats["credit_stalls"] += 1
             self._cts_waiting.append((req.rid, ctl))
             return
-        slot = self._free_slots.pop()
+        phys = self._free_slots.pop()
         mem_bytes = self.registry.mem_bytes(ctl.dtype_id)
         assert mem_bytes <= self.p.rdv_region_bytes
         assert _u8view(req.buf).size >= mem_bytes, (
             f"recv buffer {req.buf.size}B < datatype extent {mem_bytes}B")
-        self._rdv_recv[slot] = (req.rid, ctl)
+        # virtual slot = generation · n_slots + phys (16-bit wire field);
+        # arm the NIC with the exact msg_id before the sender learns the
+        # slot — frames of any other occupant are dropped on the device
+        gens = max(1, (1 << 16) // self.p.n_rdv_slots)
+        vslot = (self._slot_gen[phys] % gens) * self.p.n_rdv_slots + phys
+        self._node.write_expect(
+            phys, wire.pack_msg_id(wire.MPI_KIND_RDV, ctl.dtype_id, vslot))
+        self._rdv_recv[vslot] = (req.rid, ctl)
         self.ctl.send(ctl.src, wire.Ctl(
             wire.CTS, src=self.rank, tag=ctl.tag, seq=ctl.seq,
-            nbytes=ctl.nbytes, dtype_id=ctl.dtype_id, slot=slot))
+            nbytes=ctl.nbytes, dtype_id=ctl.dtype_id, slot=vslot,
+            credit=len(self._free_slots)))
 
     def _finish_rdv_recv(self, fin: wire.Ctl) -> None:
         entry = self._rdv_recv.pop(fin.slot, None)
@@ -531,20 +594,26 @@ class MpiHostEngine(HostEngine):
             return                              # duplicate FIN
         rid, rts = entry
         req = self._reqs.get(rid)
-        if req is None:
-            return
-        base = self.p.rdv_base + fin.slot * self.p.rdv_region_bytes
-        mem_bytes = self.registry.mem_bytes(rts.dtype_id)
-        window = np.array(self._node.read_host(base, mem_bytes), np.uint8)
-        mask = self.registry.mem_mask(rts.dtype_id)
-        view = _u8view(req.buf)
-        # the NIC already unpacked: copy only the bytes the datatype wrote
-        # (holes keep the receive buffer's existing contents — MPI unpack)
-        view[:mem_bytes][mask] = window[mask]
-        self._quarantine.append((fin.slot, self._now))
+        phys = fin.slot % self.p.n_rdv_slots
+        if req is not None:
+            base = self.p.rdv_base + phys * self.p.rdv_region_bytes
+            mem_bytes = self.registry.mem_bytes(rts.dtype_id)
+            window = np.array(self._node.read_host(base, mem_bytes),
+                              np.uint8)
+            mask = self.registry.mem_mask(rts.dtype_id)
+            view = _u8view(req.buf)
+            # the NIC already unpacked: copy only the bytes the datatype
+            # wrote (holes keep the buffer's contents — MPI unpack)
+            view[:mem_bytes][mask] = window[mask]
+        # disarm and recycle the slot immediately: late duplicates of this
+        # (or any earlier) occupant no longer match the expect table
+        self._node.write_expect(phys, 0)
+        self._slot_gen[phys] += 1
+        self._free_slots.append(phys)
         self.stats["bytes_recv"] += fin.nbytes
-        self._complete_req(req, source=rts.src, tag=rts.tag,
-                           nbytes=fin.nbytes)
+        if req is not None:
+            self._complete_req(req, source=rts.src, tag=rts.tag,
+                               nbytes=fin.nbytes)
 
     # ----------------------------------------------------------- checkpoint
     def _snap_ent(self, ent: dict) -> dict:
@@ -604,6 +673,10 @@ class MpiHostEngine(HostEngine):
             eager_cooldown=list(self._eager_cooldown.items()),
             rdv_sends=[(k, self._snap_ent(e))
                        for k, e in self._rdv_sends.items()],
+            rdv_queue=[(d, [self._snap_ent(e) for e in q])
+                       for d, q in self._rdv_queue.items()],
+            rdv_window=list(self._rdv_window.items()),
+            rdv_outstanding=list(self._rdv_outstanding.items()),
             active=[dict(self._snap_ent(e),
                          sender=e["sender"].snapshot())
                     for e in self._active],
@@ -615,7 +688,7 @@ class MpiHostEngine(HostEngine):
             rdv_recv=[(slot, rid, ctl_t(c))
                       for slot, (rid, c) in self._rdv_recv.items()],
             free_slots=list(self._free_slots),
-            quarantine=list(self._quarantine),
+            slot_gen=list(self._slot_gen),
             cts_waiting=[(rid, ctl_t(c)) for rid, c in self._cts_waiting],
             stats=dict(self.stats),
             errors=list(self.errors),
@@ -641,6 +714,10 @@ class MpiHostEngine(HostEngine):
         self._eager_cooldown = dict(snap["eager_cooldown"])
         self._rdv_sends = {tuple(k): self._snap_ent(e)
                            for k, e in snap["rdv_sends"]}
+        self._rdv_queue = {d: deque(self._snap_ent(e) for e in q)
+                           for d, q in snap["rdv_queue"]}
+        self._rdv_window = dict(snap["rdv_window"])
+        self._rdv_outstanding = dict(snap["rdv_outstanding"])
         self._active = []
         for es in snap["active"]:
             ent = {k: v for k, v in es.items() if k != "sender"}
@@ -661,7 +738,7 @@ class MpiHostEngine(HostEngine):
         self._rdv_recv = {slot: (rid, wire.Ctl(*c))
                           for slot, rid, c in snap["rdv_recv"]}
         self._free_slots = list(snap["free_slots"])
-        self._quarantine = deque(tuple(q) for q in snap["quarantine"])
+        self._slot_gen = list(snap["slot_gen"])
         self._cts_waiting = deque((rid, wire.Ctl(*c))
                                   for rid, c in snap["cts_waiting"])
         self.stats = dict(snap["stats"])

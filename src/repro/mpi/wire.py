@@ -52,8 +52,9 @@ RTS = 1                      # rendezvous request-to-send
 CTS = 2                      # rendezvous clear-to-send (carries the slot)
 FIN_EAGER = 3                # eager message fully ACKed: envelope delivery
 FIN_RDV = 4                  # rendezvous payload fully ACKed
-BODY_BYTES = 23              # kind u8 | src u16 | tag u32 | seq u32 |
-#                              nbytes u32 | dtype u16 | slot u16 | mseq u32
+BODY_BYTES = 25              # kind u8 | src u16 | tag u32 | seq u32 |
+#                              nbytes u32 | dtype u16 | slot u16 | mseq u32 |
+#                              credit u16
 
 
 def pack_msg_id(kind: int, dtype_id: int, slot: int) -> int:
@@ -85,6 +86,10 @@ class Ctl:
     #                          FIN_EAGER must enter tag matching in send
     #                          order (MPI non-overtaking), regardless of
     #                          which control datagram lands first
+    credit: int = 0          # CTS: receiver's remaining free rendezvous
+    #                          slot leases after this grant — the sender
+    #                          sizes its per-destination RTS pipeline
+    #                          window from it (end-to-end flow control)
 
 
 def encode_body(c: Ctl) -> np.ndarray:
@@ -97,6 +102,7 @@ def encode_body(c: Ctl) -> np.ndarray:
     b[15:17] = divmod(c.dtype_id, 256)[0], c.dtype_id & 0xFF
     b[17:19] = divmod(c.slot, 256)[0], c.slot & 0xFF
     b[19:23] = np.frombuffer(int(c.mseq).to_bytes(4, "big"), np.uint8)
+    b[23:25] = divmod(c.credit, 256)[0], c.credit & 0xFF
     return b
 
 
@@ -109,7 +115,7 @@ def decode_body(b: np.ndarray) -> Ctl:
 
     return Ctl(kind=int(b[0]), src=u16(1), tag=u32(3), seq=u32(7),
                nbytes=u32(11), dtype_id=u16(15), slot=u16(17),
-               mseq=u32(19))
+               mseq=u32(19), credit=u16(23))
 
 
 def _u16(frame: np.ndarray, off: int) -> int:

@@ -54,11 +54,15 @@ class LinkState:
     duplicated: jax.Array  # () int32
     reordered: jax.Array   # () int32 — packets given the reorder penalty
     delivered: jax.Array   # () int32
+    deferred: jax.Array    # () int32 — ready packets a pop left behind
+    #                          because the ingress batch was full (per-link
+    #                          stall pressure: the NIC, not the wire, is
+    #                          the bottleneck when this grows)
 
     def tree_flatten(self):
         return (self.data, self.length, self.deliver_at, self.occupied,
                 self.pushed, self.lost, self.overflowed, self.duplicated,
-                self.reordered, self.delivered), None
+                self.reordered, self.delivered, self.deferred), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -77,6 +81,7 @@ def make_state(capacity: int) -> LinkState:
         duplicated=jnp.zeros((), jnp.int32),
         reordered=jnp.zeros((), jnp.int32),
         delivered=jnp.zeros((), jnp.int32),
+        deferred=jnp.zeros((), jnp.int32),
     )
 
 
@@ -128,6 +133,7 @@ def _push(cfg: LinkConfig, state: LinkState, key: jax.Array,
         reordered=state.reordered
         + (cand_valid & reo).sum().astype(jnp.int32),
         delivered=state.delivered,
+        deferred=state.deferred,
     )
 
 
@@ -143,7 +149,8 @@ def _pop(state: LinkState, now, n: int
                           valid=take[order])
     new = dataclasses.replace(
         state, occupied=state.occupied & ~take,
-        delivered=state.delivered + take.sum().astype(jnp.int32))
+        delivered=state.delivered + take.sum().astype(jnp.int32),
+        deferred=state.deferred + (ready & ~take).sum().astype(jnp.int32))
     return new, out
 
 
@@ -168,4 +175,4 @@ class Link:
     def stats(self, state: LinkState) -> dict:
         return {k: int(getattr(state, k)) for k in
                 ("pushed", "lost", "overflowed", "duplicated", "reordered",
-                 "delivered")}
+                 "delivered", "deferred")}

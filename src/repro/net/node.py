@@ -205,6 +205,18 @@ class Node:
         # meaningful check.
         self.completions: List[int] = []
 
+    def tick_idle(self, now: int) -> List[np.ndarray]:
+        """Advance one tick with an empty ingress batch.  The NIC step is
+        skipped entirely: with no valid frames the datapath is a no-op on
+        every piece of state except the cycle counter (which nothing
+        reads), and the jitted step costs the same whether the batch is
+        empty or full — skipping it is what makes a mostly-idle fabric
+        tick cheap.  Host engines still poll (timers, retransmits)."""
+        out: List[np.ndarray] = []
+        for e in self.engines:
+            out.extend(e.poll(now))
+        return out
+
     def tick(self, ingress: pkt.PacketBatch, now: int) -> List[np.ndarray]:
         """Advance one tick: run the NIC on the delivered ingress batch,
         hand host-path frames and completions to the engines, and return
@@ -256,6 +268,10 @@ class Node:
 
     def read_host(self, base: int, nbytes: int) -> np.ndarray:
         return self.nic.read_host(self.state, base, nbytes)
+
+    def write_expect(self, idx: int, msg_id: int) -> None:
+        """Host MMIO write into the NIC's expected-msg_id slot table."""
+        self.state = self.nic.write_expect(self.state, idx, msg_id)
 
     def snapshot(self) -> dict:
         # NIC step donates its input state: snapshots must own their buffers
